@@ -1,0 +1,63 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (µs) of a jitted call (CPU-scale measurements)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def row(name: str, us: float, derived: str = "") -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def ppl_on(params, cfg, batches) -> float:
+    from repro.models import model as M
+    tot = 0.0
+    for b in batches:
+        tot += float(M.loss_fn(params, cfg, b)[0])
+    return float(np.exp(tot / len(batches)))
+
+
+def eval_batches(cfg, n_batches: int = 4, batch: int = 8, seq: int = 64,
+                 seed: int = 997):
+    from repro.data import make_batch_iterator
+    it = make_batch_iterator(cfg, batch, seq, seed=seed)
+    return [next(it) for _ in range(n_batches)]
+
+
+def train_small_model(arch: str = "llama-7b", steps: int = 200,
+                      lr: float = 3e-3, seed: int = 0):
+    """The shared 'LLaMA-7B stand-in': smoke config trained on the synthetic
+    corpus so compression has real structure to preserve (DESIGN.md §6)."""
+    from repro.configs import get_smoke_config
+    from repro.data import make_batch_iterator
+    from repro.launch import steps as S
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import AdamWConfig
+
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    step = jax.jit(S.make_train_step(cfg, make_host_mesh(),
+                                     optimizer=AdamWConfig(lr=lr)))
+    state = S.init_train_state(cfg, jax.random.PRNGKey(seed))
+    data = make_batch_iterator(cfg, 8, 64, seed=11)
+    for _ in range(steps):
+        state, metrics = step(state, next(data))
+    return cfg, state.params, float(metrics["loss"])

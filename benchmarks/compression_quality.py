@@ -1,0 +1,68 @@
+"""Paper Tables 1/2/5 analogue: method × ratio × refinement quality matrix.
+
+Offline stand-in for the paper's LLaMA-7B/WikiText2 evaluation (DESIGN.md
+§6): the shared trained small model is compressed with each layer-wise
+objective (naive SVD / input-aware=SVD-LLM / shift-aware=Dobi-style /
+anchored=AA-SVD) with and without block-level refinement, and evaluated by
+perplexity on held-out synthetic data.  The paper's checkable claims:
+
+  T5-a  input-agnostic without refinement is degenerate (worst by far)
+  T5-b  refinement improves every objective
+  T5-c  data-driven objectives ≫ naive SVD
+  T1-a  at moderate ratio the best method is near-lossless
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import eval_batches, ppl_on, time_call
+from repro.core import CompressConfig, compress_model
+from repro.data import calibration_set
+
+
+def run(ctx) -> List[str]:
+    cfg, params = ctx["cfg"], ctx["params"]
+    # paper regime: calibration tokens / d_model >= 128 (noisy
+    # covariances invert the objective ordering below that — see
+    # EXPERIMENTS.md "calibration-regime" note)
+    calib = calibration_set(cfg, 64, 128)
+    evalb = eval_batches(cfg)
+    base_ppl = ppl_on(params, cfg, evalb)
+    rows = [f"dense_baseline,0.0,ppl={base_ppl:.3f}"]
+    matrix: Dict = {}
+    import time as _t
+    for ratio in (0.8, 0.6):
+        for obj in ("agnostic", "input_aware", "shift_aware", "anchored"):
+            for refine in ((False, True) if ratio == 0.6 else (True,)):
+                t0 = _t.time()
+                comp, _ = compress_model(
+                    params, cfg, calib,
+                    CompressConfig(ratio=ratio, objective=obj, refine=refine,
+                                   refine_epochs=6, rank_multiple=1,
+                                   microbatch=16))
+                us = (_t.time() - t0) * 1e6
+                ppl = ppl_on(comp, cfg, evalb)
+                matrix[(ratio, obj, refine)] = ppl
+                rows.append(
+                    f"compress_{obj}_r{ratio}_refine{int(refine)},{us:.0f},"
+                    f"ppl={ppl:.3f}")
+    ctx["quality_matrix"] = matrix
+    ctx["base_ppl"] = base_ppl
+
+    # paper-claim checks (recorded as derived values, asserted in tests)
+    checks = {
+        "T5a_agnostic_worst_norefine":
+            matrix[(0.6, "agnostic", False)] >
+            max(matrix[(0.6, o, False)] for o in
+                ("input_aware", "shift_aware", "anchored")),
+        "T5b_refine_helps_all":
+            all(matrix[(0.6, o, True)] <= matrix[(0.6, o, False)] * 1.05
+                for o in ("agnostic", "input_aware", "shift_aware",
+                          "anchored")),
+        "T1a_moderate_ratio_near_lossless":
+            matrix[(0.8, "anchored", True)] < base_ppl * 1.35,
+    }
+    for name, ok in checks.items():
+        rows.append(f"claim_{name},0.0,{'PASS' if ok else 'FAIL'}")
+    return rows

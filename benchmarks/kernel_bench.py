@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: fused Pallas paths vs unfused XLA references.
+
+Wall times are CPU-host measurements of the XLA fallback paths (the Pallas
+kernels target TPU; interpret mode is a correctness tool, not a timing
+proxy).  The derived column reports the HBM-traffic model that motivates
+each kernel (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ref
+
+
+def run(ctx) -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    t, n, k, m = 1024, 1024, 256, 1024
+    x = jax.random.normal(key, (t, n), jnp.float32)
+    v = jax.random.normal(key, (n, k)) / n ** 0.5
+    u = jax.random.normal(key, (k, m)) / k ** 0.5
+    w = jax.random.normal(key, (n, m)) / n ** 0.5
+
+    dense = jax.jit(lambda x, w: x @ w)
+    fact = jax.jit(ref.lowrank_matmul_ref)
+    us_d = time_call(dense, x, w)
+    us_f = time_call(fact, x, v, u)
+    # traffic model: dense reads W (n·m); factorized reads k(n+m) + the
+    # (t·k) intermediate round-trip that the Pallas kernel keeps in VMEM
+    saved = 1 - k * (n + m) / (n * m)
+    rows.append(f"matmul_dense_{t}x{n}x{m},{us_d:.0f},weights={n * m}")
+    rows.append(f"matmul_factorized_k{k},{us_f:.0f},"
+                f"weight_bytes_saved={saved:.2f};"
+                f"vmem_resident_intermediate={t * k * 4}B")
+
+    xp = x + 0.1 * jax.random.normal(key, (t, n))
+    fused = jax.jit(ref.cov_accum_ref)
+    us_c = time_call(fused, x, xp)
+    rows.append(f"cov_accum_3way_{t}x{n},{us_c:.0f},"
+                f"shared_loads=2of6 vs separate GEMMs")
+
+    q = jax.random.normal(key, (1, 8, 512, 64), jnp.float32)
+    kk = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    vv = jax.random.normal(key, (1, 4, 512, 64), jnp.float32)
+    flash = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us_a = time_call(flash, q, kk, vv)
+    rows.append(f"attention_512_gqa,{us_a:.0f},online-softmax oracle")
+    return rows

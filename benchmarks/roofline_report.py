@@ -1,0 +1,39 @@
+"""§Roofline benchmark: summarize the dry-run artifacts (one row per cell).
+
+Reads artifacts/dryrun (the optimized build) and, when present,
+artifacts/dryrun_baseline_v0 (the pre-hillclimb snapshot) to report the
+before→after movement of the dominant roofline term.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.launch import roofline as RL
+
+
+def run(ctx) -> List[str]:
+    rows = []
+    base_dir = "artifacts/dryrun_baseline_v0"
+    cur = {c["cell"]: c for c in RL.load_cells("artifacts/dryrun")}
+    base = ({c["cell"]: c for c in RL.load_cells(base_dir)}
+            if os.path.isdir(base_dir) else {})
+    for cell, c in sorted(cur.items()):
+        if c.get("mesh") != "pod_16x16":
+            continue
+        if c["status"] != "ok":
+            rows.append(f"roofline_{cell},0.0,{c['status']}")
+            continue
+        r = c["roofline"]
+        derived = (f"bottleneck={r['bottleneck']};"
+                   f"step_lb={r['step_time_lower_bound_s']:.3e}s;"
+                   f"frac={r.get('roofline_fraction', 0):.4f}")
+        b = base.get(cell)
+        if b and b.get("status") == "ok":
+            speedup = (b["roofline"]["step_time_lower_bound_s"] /
+                       max(r["step_time_lower_bound_s"], 1e-12))
+            derived += f";speedup_vs_baseline={speedup:.2f}x"
+        rows.append(f"roofline_{cell},0.0,{derived}")
+    return rows

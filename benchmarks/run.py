@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  compression_quality  — Tables 1/2/5 (method × ratio × refinement PPL matrix)
+  error_evolution      — Figures 1/4 (per-depth MSE / cosine distance)
+  calibration_size     — Figure 3 (quality vs calibration budget)
+  memory_speedup       — App. B.3/B.4 + Table 4 (ratio math, params, serving)
+  kernel_bench         — Pallas kernel motivations (traffic models + timings)
+  roofline_report      — §Roofline summary from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    import time
+
+    from benchmarks import (calibration_size, compression_quality,
+                            error_evolution, kernel_bench, memory_speedup,
+                            roofline_report)
+    from benchmarks.common import train_small_model
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    cfg, params, final_loss = train_small_model(steps=200)
+    print(f"train_substrate_200steps,0.0,final_loss={final_loss:.3f}")
+    ctx = {"cfg": cfg, "params": params}
+    for mod in (compression_quality, error_evolution, calibration_size,
+                memory_speedup, kernel_bench, roofline_report):
+        for row in mod.run(ctx):
+            print(row)
+    print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},end-to-end")
+
+
+if __name__ == "__main__":
+    main()

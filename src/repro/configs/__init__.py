@@ -1,0 +1,53 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` / ``get_smoke_config(arch_id)`` resolve the assigned
+architecture ids (``--arch <id>`` in the launchers).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    SHAPES_BY_NAME,
+    ShapeConfig,
+    SSMConfig,
+)
+
+# arch-id -> module name
+_REGISTRY: Dict[str, str] = {
+    "phi-3-vision-4.2b": "phi_3_vision_4_2b",
+    "gemma3-1b": "gemma3_1b",
+    "granite-3-8b": "granite_3_8b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "whisper-base": "whisper_base",
+    "zamba2-7b": "zamba2_7b",
+    # the paper's own evaluation model
+    "llama-7b": "llama_7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [a for a in _REGISTRY if a != "llama-7b"]
+ALL_ARCHS: List[str] = list(_REGISTRY)
+
+
+def _module(arch: str):
+    if arch not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(f"repro.configs.{_REGISTRY[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE_CONFIG

@@ -1,0 +1,239 @@
+"""Model configuration dataclasses.
+
+One frozen dataclass describes every architecture in the zoo.  Family-specific
+fields default to "off" (0 / None) so a single Model implementation can branch
+on them without isinstance checks.  Every assigned architecture gets its own
+module in this package exporting ``CONFIG`` (full size) and ``SMOKE_CONFIG``
+(reduced, CPU-runnable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space (Mamba) block hyperparameters."""
+
+    version: int = 1                 # 1 = Mamba1 selective scan, 2 = Mamba2 SSD
+    state_dim: int = 16              # N: per-channel state size
+    conv_width: int = 4              # depthwise causal conv width
+    expand: int = 2                  # d_inner = expand * d_model
+    head_dim: int = 64               # Mamba2 only: channels per SSD head
+    dt_rank: int = 0                 # Mamba1 only: 0 -> ceil(d_model / 16)
+    chunk: int = 256                 # scan chunk length (remat / SSD block)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN hyperparameters."""
+
+    num_experts: int = 0             # routed experts (0 = dense FFN)
+    top_k: int = 0
+    d_ff: int = 0                    # per-expert hidden size
+    num_shared_experts: int = 0      # always-on experts (deepseek style)
+    first_k_dense: int = 0           # leading blocks keep a dense FFN
+    dense_d_ff: int = 0              # hidden size of those dense blocks
+    router_noise: float = 0.0
+    aux_loss_coef: float = 0.001
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (DeepSeek-V2) hyperparameters."""
+
+    kv_lora_rank: int = 0            # 0 = plain GQA attention
+    q_lora_rank: int = 0             # 0 = dense q projection
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    # --- attention flavour ----------------------------------------------
+    attention: str = "full"          # full | sliding_mix | mla | none
+    sliding_window: int = 0
+    global_every: int = 0            # sliding_mix: every k-th layer is global
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    rope_theta_global: float = 0.0   # sliding_mix: theta for global layers
+    attn_logit_softcap: float = 0.0
+    # --- block wiring -----------------------------------------------------
+    act_fn: str = "silu"             # silu (SwiGLU) | gelu (plain MLP)
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # --- sub-configs --------------------------------------------------------
+    ssm: Optional[SSMConfig] = None
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    # --- hybrid (zamba2): mamba backbone + shared attention block ----------
+    hybrid_attn_every: int = 0       # every k-th position invokes shared block
+    # --- encoder-decoder (whisper) ------------------------------------------
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0         # fixed encoder length (audio frames)
+    # --- modality frontend stub ---------------------------------------------
+    frontend: str = "none"           # none | vision | audio
+    num_patches: int = 0             # vision: patch embeddings prepended
+    # --- compression (the paper's technique, first-class) --------------------
+    compress_ratio: float = 1.0      # 1.0 = dense; <1 = factorized linears
+    compress_remap: bool = False     # Dobi-style remapped ratio (App. B.4)
+    # --- numerics -------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True               # checkpoint each block in training
+    scan_layers: bool = True         # stack homogeneous layers with lax.scan
+    logits_chunk: int = 512          # chunked cross-entropy seq tile
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.ssm is not None and self.ssm.version == 1 and self.ssm.dt_rank == 0:
+            object.__setattr__(
+                self, "ssm",
+                dataclasses.replace(self.ssm, dt_rank=-(-self.d_model // 16)))
+
+    # ------------------------------------------------------------------
+    @property
+    def is_attention_free(self) -> bool:
+        return self.attention == "none"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if long_500k decode is in-scope (sub-quadratic / windowed)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.attention == "sliding_mix"
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every assigned arch has an autoregressive decoder
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        n = 0
+        n += v * d                                    # embedding
+        if not self.tie_embeddings:
+            n += v * d                                # lm head
+        n += self.num_layers * self._block_params()
+        if self.num_encoder_layers:
+            n += self.num_encoder_layers * self._encoder_block_params()
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        if self.moe is None or self.moe.num_experts == 0:
+            return self.param_count()
+        m = self.moe
+        d = self.d_model
+        expert = 3 * d * m.d_ff
+        inactive = (m.num_experts - m.top_k) * expert
+        moe_layers = self.num_layers - m.first_k_dense
+        return self.param_count() - moe_layers * inactive
+
+    def _attn_params(self) -> int:
+        d, h, kv, hd = self.d_model, self.num_heads, self.num_kv_heads, self.head_dim
+        if self.mla is not None and self.mla.kv_lora_rank:
+            ml = self.mla
+            qd = ml.qk_nope_head_dim + ml.qk_rope_head_dim
+            n = 0
+            if ml.q_lora_rank:
+                n += d * ml.q_lora_rank + ml.q_lora_rank * h * qd
+            else:
+                n += d * h * qd
+            n += d * (ml.kv_lora_rank + ml.qk_rope_head_dim)
+            n += ml.kv_lora_rank * h * (ml.qk_nope_head_dim + ml.v_head_dim)
+            n += h * ml.v_head_dim * d
+            return n
+        return d * h * hd + 2 * d * kv * hd + h * hd * d
+
+    def _ffn_params(self, layer_idx: int = -1) -> int:
+        d = self.d_model
+        if self.moe is not None and self.moe.num_experts:
+            m = self.moe
+            routed = m.num_experts * 3 * d * m.d_ff
+            shared = m.num_shared_experts * 3 * d * m.d_ff
+            router = d * m.num_experts
+            return routed + shared + router
+        mult = 3 if self.act_fn == "silu" else 2
+        return mult * d * self.d_ff
+
+    def _ssm_params(self) -> int:
+        s = self.ssm
+        d = self.d_model
+        di = s.expand * d
+        if s.version == 1:
+            n = d * 2 * di                     # in_proj (x, z)
+            n += di * s.conv_width             # depthwise conv
+            n += di * (s.dt_rank + 2 * s.state_dim)   # x_proj
+            n += s.dt_rank * di + di           # dt_proj
+            n += di * s.state_dim + di         # A_log, D
+            n += di * d                        # out_proj
+            return n
+        nheads = di // s.head_dim
+        n = d * (2 * di + 2 * s.state_dim + nheads)  # in_proj (z,x,B,C,dt)
+        n += (di + 2 * s.state_dim) * s.conv_width
+        n += nheads * 2                        # A_log, D
+        n += di * d                            # out_proj
+        return n
+
+    def _block_params(self) -> int:
+        d = self.d_model
+        norms = 2 * d
+        if self.family == "ssm":
+            return self._ssm_params() + d
+        if self.family == "hybrid":
+            # mamba block per layer + ONE shared attn block amortized over layers
+            mamba = self._ssm_params() + d
+            mult = 3 if self.act_fn == "silu" else 2
+            shared = self._attn_params() + mult * d * self.d_ff + 2 * d
+            return mamba + shared // self.num_layers
+        return self._attn_params() + self._ffn_params() + norms
+
+    def _encoder_block_params(self) -> int:
+        d = self.d_model
+        mult = 3 if self.act_fn == "silu" else 2
+        return self._attn_params() + mult * d * self.d_ff + 2 * d
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (seq_len, global_batch) input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4096, 256, "train"),
+    ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32768, 128, "decode"),
+    ShapeConfig("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

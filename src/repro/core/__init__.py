@@ -1,0 +1,11 @@
+"""AA-SVD core: the paper's contribution.
+
+- ``lowrank``     — Thm 3.2 closed-form anchored-adaptive low-rank solve
+- ``calibration`` — streaming covariance accumulation (App. B.1)
+- ``ranks``       — ratio→rank math incl. Dobi-style remapping (App. B.3/4)
+- ``refine``      — block-level local refinement (Alg. 2 step 9, App. B.2)
+- ``pipeline``    — Algorithm 2 end-to-end block-wise driver
+"""
+
+from repro.core import calibration, lowrank, pipeline, ranks, refine  # noqa: F401
+from repro.core.pipeline import CompressConfig, compress_model  # noqa: F401

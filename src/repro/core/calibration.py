@@ -1,0 +1,77 @@
+"""Streaming covariance accumulation for calibration (App. B.1).
+
+Covariances are accumulated in fp32 over token batches:
+
+    xx   += Xᵀ X      (original ⊗ original)
+    xxp  += Xᵀ X'     (original ⊗ shifted   — the anchored cross term)
+    xpxp += X'ᵀ X'    (shifted ⊗ shifted)
+
+with X given as rows (tokens, n).  Cost per batch is 3 rank-l updates of an
+n×n matrix — one MXU-bound GEMM stream; memory is 3·n² fp32 regardless of
+calibration size.  Expert banks accumulate per-expert covariances
+((E, n, n)) from the routed capacity buffers — zero-padded slots contribute
+zero outer products, so no masking is needed.
+
+Distributed: accumulate per-device partial covariances on data-sharded
+activations and all-reduce once per block (a single d×d psum; the jitted
+``update`` lowers to exactly that under pjit when token dims are sharded).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def init_covs(n: int, experts: int = 0) -> Dict[str, jnp.ndarray]:
+    shape = (experts, n, n) if experts else (n, n)
+    return {
+        "xx": jnp.zeros(shape, jnp.float32),
+        "xxp": jnp.zeros(shape, jnp.float32),
+        "xpxp": jnp.zeros(shape, jnp.float32),
+        "count": jnp.zeros((), jnp.float32),
+    }
+
+
+@jax.jit
+def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                xp: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """x, xp: (..., tokens, n) activations (original / shifted).  Leading
+    axes beyond the last two are treated as expert/bank axes and must match
+    the accumulator shape."""
+    x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
+    xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp
+    xf = x.astype(jnp.float32)
+    xpf = xp.astype(jnp.float32)
+    if covs["xx"].ndim == 3:  # expert banks: (E, tokens, n)
+        upd = lambda acc, a, b: acc + jnp.einsum("etn,etm->enm", a, b)
+    else:
+        xf = xf.reshape(-1, xf.shape[-1])
+        xpf = xpf.reshape(-1, xpf.shape[-1])
+        upd = lambda acc, a, b: acc + a.T @ b
+    return {
+        "xx": upd(covs["xx"], xf, xf),
+        "xxp": upd(covs["xxp"], xf, xpf),
+        "xpxp": upd(covs["xpxp"], xpf, xpf),
+        "count": covs["count"] + xf.shape[-2] if covs["xx"].ndim == 3
+        else covs["count"] + xf.shape[0],
+    }
+
+
+def objective_covs(covs: Dict[str, jnp.ndarray], objective: str):
+    """Map accumulated covariances to the (cov_ab, cov_bb) of Thm 3.2.
+
+    objective ∈ {input_aware (A=B=X), shift_aware (A=B=X'),
+                 anchored (A=X, B=X')}.
+    """
+    if objective == "input_aware":
+        return covs["xx"], covs["xx"]
+    if objective == "shift_aware":
+        return covs["xpxp"], covs["xpxp"]
+    if objective == "anchored":
+        return covs["xxp"], covs["xpxp"]
+    raise ValueError(f"unknown objective {objective!r} "
+                     "(agnostic is handled by solve_agnostic)")

@@ -1,0 +1,66 @@
+"""Factorized parameter structures: the compressed model as a first-class
+deployment target.
+
+``factorize_params`` swaps every compressible linear {"w"} for zero-filled
+{"v", "u"} factors at the rank implied by the compression ratio — used under
+``jax.eval_shape`` by the dry-run (zero allocation) and by serving code to
+pre-allocate buffers a compressed checkpoint is loaded into.  The real
+factors come from ``core.pipeline.compress_model``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ranks as R
+from repro.core.pipeline import get_path, linear_specs, set_path
+from repro.models import blocks as B
+
+
+def _factorize_leaf(leaf, ratio: float, remap: bool, multiple: int):
+    w = leaf["w"]
+    n, m = w.shape[-2], w.shape[-1]
+    k = R.rank_for_ratio(m, n, ratio, remap=remap, multiple=multiple)
+    lead = w.shape[:-2]
+    new = {kk: vv for kk, vv in leaf.items() if kk != "w"}
+    new["v"] = jnp.zeros(lead + (n, k), w.dtype)
+    new["u"] = jnp.zeros(lead + (k, m), w.dtype)
+    return new
+
+
+def factorize_params(params, cfg, *, ratio: Optional[float] = None,
+                     remap: Optional[bool] = None,
+                     rank_multiple: int = 128) -> Any:
+    """Structure transform: dense params -> AA-SVD factorized params."""
+    ratio = cfg.compress_ratio if ratio is None else ratio
+    remap = cfg.compress_remap if remap is None else remap
+    if ratio >= 1.0:
+        return params
+    params = jax.tree.map(lambda x: x, params)  # fresh containers
+
+    def do_stages(stages, stage_params):
+        for st, sp in zip(stages, stage_params):
+            for ki, kind in enumerate(st.kinds):
+                if kind in B.SHARED_KINDS:
+                    continue
+                for path, _, _ in linear_specs(kind, cfg):
+                    leaf = get_path(sp[ki], path)
+                    if "w" in leaf:
+                        set_path(sp[ki], path,
+                                 _factorize_leaf(leaf, ratio, remap,
+                                                 rank_multiple))
+
+    do_stages(B.stage_program(cfg), params["stages"])
+    if "encoder" in params:
+        do_stages(B.encoder_stages(cfg), params["encoder"]["stages"])
+    if "shared" in params:
+        for kind, p in params["shared"].items():
+            for path, _, _ in linear_specs(kind, cfg):
+                leaf = get_path(p, path)
+                if "w" in leaf:
+                    set_path(p, path,
+                             _factorize_leaf(leaf, ratio, remap, rank_multiple))
+    return params

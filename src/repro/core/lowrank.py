@@ -1,0 +1,107 @@
+"""Theorem 3.2: closed-form anchored-adaptive low-rank solve.
+
+Paper convention: weight W ∈ R^{m×n}, activations X, X' ∈ R^{n×l} stacked
+column-wise; objective  min_{rank k} ||W X − W' X'||_F².  With
+C = X X'ᵀ and S = X' X'ᵀ = L Lᵀ, the optimum is
+
+    W'* = SVD_k(W C S⁻¹ L) L⁻¹ = U Vᵀ,   U = U_k Σ_k,  V = L⁻ᵀ V_k.
+
+Our linear layers store w = Wᵀ (in, out) and compute y = x @ w, so the
+factor pair returned here is {"v": V (n, k), "u": Uᵀ (k, m)} with
+y = (x @ v) @ u — identical math, row-major activations.
+
+Factorization of S: the default is the eigendecomposition path
+L = Q Λ^{1/2} (SVD-LLM-V2 style) — on TPU ``eigh`` is robust and gives the
+Tikhonov fallback for free (eigenvalue clamping); a Cholesky path is provided
+for parity with SVD-LLM.  Both are covered by the same theorem (App. A).
+
+Everything here operates on n×n covariances, never raw activations, so cost
+is independent of the calibration token count (App. B.1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def eckart_young(mat: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Best rank-k factors of ``mat`` (m, n): returns (A (m,k), B (n,k)) with
+    mat ≈ A @ B.T (Lemma 3.1)."""
+    u, s, vt = jnp.linalg.svd(mat.astype(jnp.float32), full_matrices=False)
+    return u[:, :k] * s[:k][None, :], vt[:k].T
+
+
+def _whitening_factors(s_cov: jnp.ndarray, *, eps: float, method: str):
+    """Return (L, L^{-T}) for S = L Lᵀ with regularization.
+
+    eigh path: L = Q Λ^{1/2}, L^{-T} = Q Λ^{-1/2} (symmetric whitening).
+    cholesky path: lower-triangular L of S + εI.
+    """
+    n = s_cov.shape[0]
+    s_cov = 0.5 * (s_cov + s_cov.T)
+    if method == "cholesky":
+        ridge = eps * jnp.maximum(jnp.trace(s_cov) / n, 1e-12)
+        l_fac = jnp.linalg.cholesky(s_cov + ridge * jnp.eye(n, dtype=s_cov.dtype))
+        l_inv_t = jax.scipy.linalg.solve_triangular(
+            l_fac, jnp.eye(n, dtype=s_cov.dtype), lower=True).T
+        return l_fac, l_inv_t
+    lam, q = jnp.linalg.eigh(s_cov)
+    floor = eps * jnp.maximum(jnp.max(lam), 1e-12)
+    lam = jnp.maximum(lam, floor)                     # Tikhonov clamp
+    sqrt_lam = jnp.sqrt(lam)
+    l_fac = q * sqrt_lam[None, :]                     # Q Λ^{1/2}
+    l_inv_t = q / sqrt_lam[None, :]                   # Q Λ^{-1/2} = L^{-T}
+    return l_fac, l_inv_t
+
+
+@functools.partial(jax.jit, static_argnames=("k", "method"))
+def solve_anchored(w: jnp.ndarray, cov_ab: jnp.ndarray, cov_bb: jnp.ndarray,
+                   k: int, *, eps: float = 1e-6,
+                   method: str = "eigh") -> Dict[str, jnp.ndarray]:
+    """Solve min_{rank k} ||W A − W' B||² from covariances (Thm 3.2).
+
+    w:      (n, m)  — our storage Wᵀ (y = x @ w)
+    cov_ab: (n, n)  — A Bᵀ accumulated as Σ x_rowᵀ x'_row
+    cov_bb: (n, n)  — B Bᵀ accumulated as Σ x'_rowᵀ x'_row
+    Returns {"v": (n, k), "u": (k, m)} with W' = (x@v)@u.
+    """
+    n, m = w.shape
+    k = min(k, n, m)
+    wf = w.astype(jnp.float32)
+    l_fac, l_inv_t = _whitening_factors(cov_bb.astype(jnp.float32),
+                                        eps=eps, method=method)
+    # M = W C S^{-1} L = W C L^{-T}   (since S^{-1} L = L^{-T})
+    mat = wf.T @ (cov_ab.astype(jnp.float32) @ l_inv_t)        # (m, n)
+    a_fac, b_fac = eckart_young(mat, k)                        # M ≈ A Bᵀ
+    v = l_inv_t @ b_fac                                        # (n, k)
+    u = a_fac.T                                                # (k, m)
+    return {"v": v, "u": u}
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def solve_agnostic(w: jnp.ndarray, k: int) -> Dict[str, jnp.ndarray]:
+    """Input-agnostic truncated SVD: min ||W − W'||_F (Eckart–Young)."""
+    n, m = w.shape
+    k = min(k, n, m)
+    a_fac, b_fac = eckart_young(w.astype(jnp.float32).T, k)   # W ≈ A Bᵀ
+    return {"v": b_fac, "u": a_fac.T}
+
+
+def factor_error(w, factors, cov_ab, cov_bb, cov_aa) -> jnp.ndarray:
+    """||W A − W' B||² from covariances only:
+    tr(W S_aa Wᵀ) − 2 tr(W C W'ᵀ) + tr(W' S_bb W'ᵀ)."""
+    wf = w.astype(jnp.float32).T                               # (m, n)
+    wp = (factors["v"] @ factors["u"]).astype(jnp.float32).T   # (m, n)
+    t1 = jnp.sum((wf @ cov_aa) * wf)
+    t2 = jnp.sum((wf @ cov_ab) * wp)
+    t3 = jnp.sum((wp @ cov_bb) * wp)
+    return t1 - 2.0 * t2 + t3
+
+
+def merge_factors(factors) -> jnp.ndarray:
+    """Dense (n, m) reconstruction of the factorized weight."""
+    return factors["v"] @ factors["u"]

@@ -1,0 +1,438 @@
+"""Algorithm 2: end-to-end block-wise AA-SVD compression with refinement.
+
+The model is unrolled into *units* (one transformer/mamba block each; scanned
+stages are unstacked and restacked afterwards).  Per unit:
+
+  1. for each tap-group of linears (q/k/v share covariances, gate/up share,
+     etc. — the paper's App. B.1 amortization): accumulate {XXᵀ, XX'ᵀ, X'X'ᵀ}
+     over the calibration stream, where X comes from the ORIGINAL unit on the
+     original stream and X' from the PARTIALLY COMPRESSED unit on the shifted
+     stream; solve Thm 3.2 per linear in the group; swap the weight for its
+     (U, V) factors.  Expert banks solve per-expert (vmapped).
+  2. block-level refinement (core.refine) against the original block outputs.
+  3. propagate both streams: X ← L_i(X) with original weights,
+     X' ← L'_i(X') with compressed weights.
+
+Weight-shared blocks (zamba2's shared attention) are compressed at their
+first invocation site and reused thereafter (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as C
+from repro.core import lowrank as LR
+from repro.core import ranks as R
+from repro.core import refine as RF
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressConfig:
+    ratio: float = 0.8
+    objective: str = "anchored"   # agnostic | input_aware | shift_aware | anchored
+    refine: bool = True
+    refine_epochs: int = 25
+    refine_lr: float = 1e-4
+    remap: bool = False           # Dobi-style ratio accounting (App. B.4)
+    eps: float = 1e-6
+    whiten: str = "eigh"          # eigh | cholesky
+    rank_multiple: int = 8        # TPU lane-friendly rank rounding
+    microbatch: int = 8           # calibration sequences per forward
+    verbose: bool = False
+
+
+# ---------------------------------------------------------------------------
+# linear-spec tables: (param_path, tap_name, is_expert_bank)
+
+
+def linear_specs(kind: str, cfg) -> List[Tuple[str, str, bool]]:
+    if kind == "mamba1":
+        return [("mixer.in_proj", "mixer/in_proj_in", False),
+                ("mixer.x_proj", "mixer/x_proj_in", False),
+                ("mixer.dt_proj", "mixer/dt_proj_in", False),
+                ("mixer.out_proj", "mixer/out_proj_in", False)]
+    if kind == "mamba2":
+        return [("mixer.in_proj", "mixer/in_proj_in", False),
+                ("mixer.out_proj", "mixer/out_proj_in", False)]
+
+    specs: List[Tuple[str, str, bool]] = []
+    if kind.startswith("mla"):
+        specs += [("attn.wq", "attn/qkv_in", False),
+                  ("attn.wkv_a", "attn/qkv_in", False),
+                  ("attn.wk_b", "attn/kvb_in", False),
+                  ("attn.wv_b", "attn/kvb_in", False),
+                  ("attn.wo", "attn/o_in", False)]
+    else:
+        specs += [("attn.wq", "attn/qkv_in", False),
+                  ("attn.wk", "attn/qkv_in", False),
+                  ("attn.wv", "attn/qkv_in", False),
+                  ("attn.wo", "attn/o_in", False)]
+    if kind == "dec_attn":
+        specs += [("xattn.wq", "xattn/q_in", False),
+                  ("xattn.wk", "xattn/kv_in", False),
+                  ("xattn.wv", "xattn/kv_in", False),
+                  ("xattn.wo", "xattn/o_in", False)]
+    if kind.endswith("_moe"):
+        specs += [("ffn.experts.gate", "ffn/experts_in", True),
+                  ("ffn.experts.up", "ffn/experts_in", True),
+                  ("ffn.experts.down", "ffn/experts_down_in", True)]
+        if cfg.moe.num_shared_experts:
+            specs += [("ffn.shared.gate", "ffn/shared/in", False),
+                      ("ffn.shared.up", "ffn/shared/in", False),
+                      ("ffn.shared.down", "ffn/shared/down_in", False)]
+    else:
+        if cfg.act_fn == "silu":
+            specs += [("ffn.gate", "ffn/in", False)]
+        specs += [("ffn.up", "ffn/in", False),
+                  ("ffn.down", "ffn/down_in", False)]
+    return specs
+
+
+def tap_groups(specs) -> List[Tuple[str, List[Tuple[str, str, bool]]]]:
+    """Group consecutive specs sharing a tap (shared covariances)."""
+    groups: List[Tuple[str, List]] = []
+    for spec in specs:
+        if groups and groups[-1][0] == spec[1]:
+            groups[-1][1].append(spec)
+        else:
+            groups.append((spec[1], [spec]))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# param path utilities
+
+
+def get_path(tree, path: str):
+    for part in path.split("."):
+        tree = tree[part]
+    return tree
+
+
+def set_path(tree, path: str, value):
+    parts = path.split(".")
+    node = tree
+    for part in parts[:-1]:
+        node = node[part]
+    node[parts[-1]] = value
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# model unroll / restack
+
+
+@dataclasses.dataclass
+class Unit:
+    name: str
+    kind: str
+    where: Tuple            # ("enc"|"dec", stage_idx, iter_idx or -1, kind_idx)
+    params: Any
+    shared: bool = False
+
+
+def _clone(tree):
+    return jax.tree.map(lambda x: x, tree)
+
+
+def unroll_units(params, cfg) -> List[Unit]:
+    units: List[Unit] = []
+
+    def walk(section: str, stages, stage_params):
+        idx = 0
+        for si, (st, sp) in enumerate(zip(stages, stage_params)):
+            iters = st.n if (st.scan and st.n > 1) else 1
+            for it in range(iters):
+                for ki, kind in enumerate(st.kinds):
+                    if kind in B.SHARED_KINDS:
+                        if not any(u.shared and u.kind == kind for u in units):
+                            units.append(Unit(
+                                name=f"{section}.shared.{kind}", kind=kind,
+                                where=(section, si, it, ki),
+                                params=_clone(params["shared"][kind]),
+                                shared=True))
+                        else:
+                            units.append(Unit(
+                                name=f"{section}.{idx}.{kind}(shared-site)",
+                                kind=kind, where=(section, si, it, ki),
+                                params=None, shared=True))
+                        idx += 1
+                        continue
+                    p = sp[ki]
+                    if st.scan and st.n > 1:
+                        p = jax.tree.map(lambda a: a[it], p)
+                    else:
+                        p = _clone(p)  # fresh containers: set_path is in-place
+                    units.append(Unit(name=f"{section}.{idx}.{kind}",
+                                      kind=kind, where=(section, si, it, ki),
+                                      params=p))
+                    idx += 1
+
+    if "encoder" in params:
+        walk("enc", B.encoder_stages(cfg), params["encoder"]["stages"])
+    walk("dec", B.stage_program(cfg), params["stages"])
+    return units
+
+
+def restack_units(params, cfg, units: List[Unit]):
+    """Write compressed unit params back (restacking scan stages)."""
+    new_params = dict(params)
+
+    def rebuild(section: str, stages, stage_params):
+        out = []
+        for si, (st, sp) in enumerate(zip(stages, stage_params)):
+            per_kind = []
+            for ki, kind in enumerate(st.kinds):
+                if kind in B.SHARED_KINDS:
+                    per_kind.append(None)
+                    continue
+                mine = [u for u in units
+                        if u.where[:2] == (section, si) and u.where[3] == ki]
+                mine.sort(key=lambda u: u.where[2])
+                if st.scan and st.n > 1:
+                    per_kind.append(jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *[u.params for u in mine]))
+                else:
+                    per_kind.append(mine[0].params)
+            out.append(per_kind)
+        return out
+
+    if "encoder" in params:
+        new_params["encoder"] = dict(params["encoder"])
+        new_params["encoder"]["stages"] = rebuild(
+            "enc", B.encoder_stages(cfg), params["encoder"]["stages"])
+    new_params["stages"] = rebuild("dec", B.stage_program(cfg),
+                                   params["stages"])
+    shared_units = {u.kind: u for u in units if u.shared and u.params is not None}
+    if shared_units:
+        new_params["shared"] = {k: u.params for k, u in shared_units.items()}
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# unit forward (jitted, with optional taps)
+
+
+def make_unit_apply(kind: str, cfg, seq_len: int, want_taps: bool):
+    positions = jnp.arange(seq_len)
+
+    def fn(p, x, enc_out):
+        ctx = M.make_ctx(cfg, positions)
+        if enc_out is not None:
+            ctx["enc_out"] = enc_out
+        if want_taps:
+            store: Dict[str, jnp.ndarray] = {}
+            with L.sowing(store):
+                y, _ = B.apply_sub_block(kind, p, x, cfg, ctx)
+            return y, store
+        y, _ = B.apply_sub_block(kind, p, x, cfg, ctx)
+        return y
+
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# per-weight solve
+
+
+def _solve_weight(w, covs, k: int, ccfg: CompressConfig):
+    if ccfg.objective == "agnostic":
+        if w.ndim == 3:
+            return jax.vmap(lambda wi: LR.solve_agnostic(wi, k))(w)
+        return LR.solve_agnostic(w, k)
+    cov_ab, cov_bb = C.objective_covs(covs, ccfg.objective)
+    solve = functools.partial(LR.solve_anchored, k=k, eps=ccfg.eps,
+                              method=ccfg.whiten)
+    if w.ndim == 3:
+        return jax.vmap(lambda wi, ca, cb: solve(wi, ca, cb))(w, cov_ab, cov_bb)
+    return solve(w, cov_ab, cov_bb)
+
+
+def _weight_rank(w, ccfg: CompressConfig) -> int:
+    n, m = (w.shape[-2], w.shape[-1])
+    return R.rank_for_ratio(m, n, ccfg.ratio, remap=ccfg.remap,
+                            multiple=ccfg.rank_multiple)
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+def _embed_stream(params, cfg, calib: Dict[str, jnp.ndarray], mb: int):
+    """Initial hidden stream batches (list of (mb, L, d)) + aux streams."""
+    n = calib["tokens"].shape[0]
+    xs = []
+    for i in range(0, n, mb):
+        batch = {k: v[i: i + mb] for k, v in calib.items()}
+        x = M._embed_inputs(params, cfg, batch)
+        if cfg.family == "encdec":
+            l = x.shape[1]
+            x = x + M.sinusoid_positions(jnp.arange(l),
+                                         cfg.d_model).astype(x.dtype)[None]
+        xs.append(x)
+    return xs
+
+
+def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
+                   ccfg: CompressConfig):
+    """Compress all blocks of a model (Algorithm 2).
+
+    params: model params (will not be mutated); cfg: ModelConfig;
+    calib: {"tokens": (N, L) [, "patches", "frames"]}.
+    Returns (compressed_params, report).
+    """
+    params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
+    units = unroll_units(params, cfg)
+    report: Dict[str, Any] = {"units": [], "config": dataclasses.asdict(ccfg)}
+
+    mb = ccfg.microbatch
+    x_stream = _embed_stream(params, cfg, calib, mb)       # original
+    xp_stream = [jnp.copy(x) for x in x_stream]            # shifted
+
+    # whisper: encoder stream runs first; enc_out streams feed cross-attn
+    enc_orig: Optional[List] = None
+    enc_comp: Optional[List] = None
+    if cfg.family == "encdec":
+        n = calib["tokens"].shape[0]
+        enc_in = []
+        for i in range(0, n, mb):
+            frames = calib["frames"][i: i + mb]
+            le = frames.shape[1]
+            enc_in.append(frames.astype(jnp.dtype(cfg.dtype)) +
+                          M.sinusoid_positions(jnp.arange(le), cfg.d_model
+                                               ).astype(jnp.dtype(cfg.dtype))[None])
+        enc_orig = enc_in
+        enc_comp = [jnp.copy(x) for x in enc_in]
+
+    cur_streams = {"enc": (enc_orig, enc_comp), "dec": (x_stream, xp_stream)}
+    shared_done: Dict[str, Any] = {}
+    enc_normed = False
+
+    for unit in units:
+        section = unit.where[0]
+        if section == "dec" and cfg.family == "encdec" and not enc_normed:
+            # decoder cross-attention consumes the *normed* encoder output
+            fn = params["encoder"]["final_norm"]
+            for i in range(len(enc_orig)):
+                enc_orig[i] = L.apply_norm(fn, enc_orig[i], eps=cfg.norm_eps)
+                enc_comp[i] = L.apply_norm(fn, enc_comp[i], eps=cfg.norm_eps)
+            enc_normed = True
+        xs, xps = cur_streams[section]
+        seq_len = xs[0].shape[1]
+        dec_aux_o = enc_orig if (section == "dec" and cfg.family == "encdec") else None
+        dec_aux_c = enc_comp if (section == "dec" and cfg.family == "encdec") else None
+
+        if unit.shared and unit.params is None:
+            # later invocation site of a weight-shared block: reuse
+            comp_p = shared_done[unit.kind]["comp"]
+            orig_p = shared_done[unit.kind]["orig"]
+            fwd = make_unit_apply(unit.kind, cfg, seq_len, want_taps=False)
+            for i in range(len(xs)):
+                xs[i] = fwd(orig_p, xs[i],
+                            None if dec_aux_o is None else dec_aux_o[i])
+                xps[i] = fwd(comp_p, xps[i],
+                             None if dec_aux_c is None else dec_aux_c[i])
+            report["units"].append({"name": unit.name, "reused": True})
+            continue
+
+        orig_p = _clone(unit.params)
+        cur_p = unit.params
+        fwd_taps = make_unit_apply(unit.kind, cfg, seq_len, want_taps=True)
+        fwd = make_unit_apply(unit.kind, cfg, seq_len, want_taps=False)
+
+        unit_report = {"name": unit.name, "kind": unit.kind, "linears": []}
+
+        # ---- stage 1: per-group covariance accumulation + closed-form solve
+        for tap, group in tap_groups(linear_specs(unit.kind, cfg)):
+            covs = None
+            is_bank = group[0][2]
+            if ccfg.objective != "agnostic":
+                for i in range(len(xs)):
+                    _, taps_o = fwd_taps(orig_p, xs[i],
+                                         None if dec_aux_o is None else dec_aux_o[i])
+                    _, taps_c = fwd_taps(cur_p, xps[i],
+                                         None if dec_aux_c is None else dec_aux_c[i])
+                    a_act, b_act = taps_o[tap], taps_c[tap]
+                    if not is_bank:  # flatten (B, L, n) -> (tokens, n)
+                        a_act = a_act.reshape(-1, a_act.shape[-1])
+                        b_act = b_act.reshape(-1, b_act.shape[-1])
+                    if covs is None:
+                        experts = a_act.shape[0] if is_bank else 0
+                        covs = C.init_covs(a_act.shape[-1], experts)
+                    covs = C.update_covs(covs, a_act, b_act)
+            for path, _, is_bank in group:
+                wp = get_path(cur_p, path)
+                w = wp["w"]
+                k = _weight_rank(w, ccfg)
+                factors = _solve_weight(w, covs, k, ccfg)
+                new_p = {kk: vv for kk, vv in wp.items() if kk != "w"}
+                new_p.update(factors)
+                set_path(cur_p, path, new_p)
+                unit_report["linears"].append(
+                    {"path": path, "rank": k, "shape": list(w.shape),
+                     "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2], k,
+                                               remap=ccfg.remap)})
+            if ccfg.verbose:
+                print(f"  {unit.name}: group {tap} -> rank "
+                      f"{unit_report['linears'][-1]['rank']}")
+
+        # ---- stage 2: block-level refinement --------------------------------
+        y_anchor = [fwd(orig_p, xs[i],
+                        None if dec_aux_o is None else dec_aux_o[i]
+                        ).astype(jnp.float32) for i in range(len(xs))]
+        if ccfg.refine:
+            xp_b = [(xps[i], None if dec_aux_c is None else dec_aux_c[i])
+                    for i in range(len(xps))]
+            cur_p, hist = RF.refine_unit(
+                lambda p, xp, aux: fwd(p, xp, aux),
+                cur_p, xp_b, y_anchor,
+                epochs=ccfg.refine_epochs, lr=ccfg.refine_lr)
+            unit_report.update(pre_refine_mse=hist["pre_refine_mse"],
+                               post_refine_mse=hist["post_refine_mse"])
+        else:
+            mse = float(sum(
+                jnp.mean(jnp.square(
+                    fwd(cur_p, xps[i],
+                        None if dec_aux_c is None else dec_aux_c[i]
+                        ).astype(jnp.float32) - y_anchor[i]))
+                for i in range(len(xps))) / len(xps))
+            unit_report["pre_refine_mse"] = mse
+
+        # ---- propagate streams ------------------------------------------------
+        for i in range(len(xs)):
+            xs[i] = y_anchor[i].astype(xs[i].dtype)
+            xps[i] = fwd(cur_p, xps[i],
+                         None if dec_aux_c is None else dec_aux_c[i])
+        unit.params = cur_p
+        if unit.shared:
+            shared_done[unit.kind] = {"orig": orig_p, "comp": cur_p}
+        report["units"].append(unit_report)
+        if ccfg.verbose:
+            msg = f"[compress] {unit.name}"
+            if "post_refine_mse" in unit_report:
+                msg += (f" mse {unit_report['pre_refine_mse']:.3e} -> "
+                        f"{unit_report['post_refine_mse']:.3e}")
+            print(msg)
+
+    # whisper: apply final encoder norm to enc streams happens inside the
+    # decoder's ctx at model level; during compression the decoder units see
+    # the normed encoder output:
+    new_params = restack_units(params, cfg, units)
+    return new_params, report
+
+
+def compress_ratio_report(params, new_params) -> Dict[str, float]:
+    def count(t):
+        return sum(x.size for x in jax.tree.leaves(t))
+    before, after = count(params), count(new_params)
+    return {"params_before": before, "params_after": after,
+            "ratio": after / before}

@@ -1,0 +1,82 @@
+"""Compression-ratio → truncation-rank math (App. B.3/B.4).
+
+Standard storage: a rank-k factorization of an (m, n) weight stores
+k(m+n) parameters, so ratio ρ = k(m+n)/(mn) and k = ρ·mn/(m+n).  The
+valid range is k ≤ mn/(m+n) at ρ=1 — high-rank approximations are not
+representable.
+
+Dobi-SVD remapping: store the smaller factor plus the top min(m,n)
+rows/cols of the larger factor at half precision; effective storage is
+max(m,n)·k full-precision-equivalents, so ρ = k/min(m,n) and every
+ρ ∈ [0,1] maps to k = ρ·min(m,n) — the full rank range.  (``AA-SVD^q``
+rows in the paper's tables.)
+
+Also: non-uniform allocation helpers (beyond-paper; §Limitations notes
+uniform ratio as the paper's choice).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+
+def rank_for_ratio(m: int, n: int, ratio: float, *, remap: bool = False,
+                   multiple: int = 8) -> int:
+    """Truncation rank for a target compression ratio of an (m, n) weight.
+
+    ``multiple``: round up to a lane-friendly multiple (TPU: last-dim tiles
+    of 128 are ideal; 8 is the minimum sublane quantum) — never above the
+    valid maximum.
+    """
+    if ratio >= 1.0:
+        k_max = min(m, n) if remap else (m * n) // (m + n)
+        return max(1, k_max)
+    k = ratio * min(m, n) if remap else ratio * m * n / (m + n)
+    k = max(1, int(math.floor(k)))
+    if multiple > 1:
+        k = min(-(-k // multiple) * multiple,
+                min(m, n) if remap else max(1, (m * n) // (m + n)))
+    return max(1, k)
+
+
+def achieved_ratio(m: int, n: int, k: int, *, remap: bool = False) -> float:
+    if remap:
+        return k * max(m, n) / (m * n)
+    return k * (m + n) / (m * n)
+
+
+def params_saved(m: int, n: int, k: int, *, remap: bool = False) -> int:
+    stored = k * max(m, n) if remap else k * (m + n)
+    return m * n - stored
+
+
+def allocate_by_loss(shapes: Sequence[Tuple[int, int]],
+                     losses: Sequence[float], budget_ratio: float,
+                     *, remap: bool = False, floor_ratio: float = 0.25,
+                     iters: int = 40) -> List[int]:
+    """Beyond-paper: SVD-LLM-V2-style reallocation.  Given per-layer
+    truncation losses from a uniform first pass, shift rank from low-loss to
+    high-loss layers under the same global parameter budget.
+
+    Water-filling on ratio r_i ∝ loss_i^{1/2}, clipped to [floor, 1), then
+    renormalized to the budget by bisection.
+    """
+    total = sum(m * n for m, n in shapes)
+    budget = budget_ratio * total
+    weights = [max(l, 1e-12) ** 0.5 for l in losses]
+
+    def ratios_for(scale: float) -> List[float]:
+        return [min(0.999, max(floor_ratio * budget_ratio, scale * w))
+                for w in weights]
+
+    lo, hi = 0.0, 1e6
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        used = sum(r * m * n for r, (m, n) in zip(ratios_for(mid), shapes))
+        if used > budget:
+            hi = mid
+        else:
+            lo = mid
+    return [rank_for_ratio(m, n, r, remap=remap)
+            for r, (m, n) in zip(ratios_for(lo), shapes)]

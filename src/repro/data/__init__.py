@@ -1,0 +1,6 @@
+from repro.data import synthetic  # noqa: F401
+from repro.data.synthetic import (  # noqa: F401
+    calibration_set,
+    make_batch_iterator,
+    synthetic_tokens,
+)

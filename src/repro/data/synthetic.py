@@ -1,0 +1,98 @@
+"""Deterministic synthetic data pipeline.
+
+Offline container: no WikiText2 — we generate a *structured* synthetic token
+stream (a Zipfian unigram mixed with a periodic Markov backbone) so that a
+small model trained on it has real statistical structure to learn and
+compression quality is measurable (the paper's relative claims are evaluated
+on this; see DESIGN.md §6).
+
+Determinism + fault tolerance: batches are a pure function of (seed, step),
+so a restarted worker regenerates exactly the batch it crashed on — no data
+state in checkpoints beyond the step counter.  Hosts shard batches by
+``process_index`` so multi-host loading never duplicates work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, static_argnames=("n", "length", "vocab"))
+def synthetic_tokens(key, n: int, length: int, vocab: int) -> jnp.ndarray:
+    """(n, length) int32 tokens: Zipf unigrams + order-1 Markov structure."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    zipf = 1.0 / ranks
+    zipf = zipf / jnp.sum(zipf)
+    uni = jax.random.categorical(k1, jnp.log(zipf)[None, :],
+                                 shape=(n, length))
+    # Markov backbone: token_{t+1} ≡ a·token_t + b (mod small alphabet),
+    # blended with the unigram stream for [structure + noise]
+    a = 31
+    alphabet = max(vocab // 4, 2)
+    start = jax.random.randint(k2, (n, 1), 0, alphabet)
+
+    def step(tok, _):
+        nxt = (a * tok + 7) % alphabet
+        return nxt, nxt
+
+    _, chain = jax.lax.scan(step, start[:, 0], None, length=length)
+    chain = chain.T  # (n, length)
+    gate = jax.random.bernoulli(k3, 0.65, (n, length))
+    return jnp.where(gate, chain, uni).astype(jnp.int32)
+
+
+def lm_batch(key, batch: int, seq_len: int, vocab: int) -> Dict[str, jnp.ndarray]:
+    """Next-token LM batch: inputs tokens[:-1]-style shift done via labels."""
+    toks = synthetic_tokens(key, batch, seq_len + 1, vocab)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_batch_iterator(cfg, batch: int, seq_len: int, *, seed: int = 0,
+                        start_step: int = 0,
+                        process_index: int = 0,
+                        process_count: int = 1) -> Iterator[Dict[str, jnp.ndarray]]:
+    """Deterministic per-step batches; host-sharded by process index."""
+    step = start_step
+    local = batch // process_count
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        key = jax.random.fold_in(key, process_index)
+        b = lm_batch(key, local, seq_len, cfg.vocab_size)
+        b = _add_frontend_inputs(cfg, key, b, local, seq_len)
+        yield b
+        step += 1
+
+
+def _add_frontend_inputs(cfg, key, batch, n, seq_len):
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.02 * jax.random.normal(
+            key, (n, cfg.num_patches, cfg.d_model))
+        # labels span patches + text (frontend positions predict padding)
+        pad = jnp.zeros((n, cfg.num_patches), jnp.int32)
+        batch["labels"] = jnp.concatenate([pad, batch["labels"]], axis=1)
+        batch["tokens"] = batch["tokens"][:, : seq_len - cfg.num_patches]
+        batch["labels"] = batch["labels"][:, : seq_len]
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (n, cfg.encoder_seq_len, cfg.d_model))
+    return batch
+
+
+def calibration_set(cfg, n: int, seq_len: int, *, seed: int = 1234
+                    ) -> Dict[str, jnp.ndarray]:
+    """The paper's calibration set (default 256 × 2048 at full scale)."""
+    key = jax.random.PRNGKey(seed)
+    calib = {"tokens": synthetic_tokens(key, n, seq_len, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        calib["patches"] = 0.02 * jax.random.normal(
+            key, (n, cfg.num_patches, cfg.d_model))
+    if cfg.frontend == "audio":
+        calib["frames"] = 0.02 * jax.random.normal(
+            key, (n, cfg.encoder_seq_len, cfg.d_model))
+    return calib

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the AA-SVD hot spots.
+
+- ``lowrank_matmul`` — fused (x@V)@U factorized inference GEMM (VMEM-resident
+  rank-k intermediate, phase-fused two-stage grid)
+- ``cov_accum``     — one-pass streaming {XᵀX, XᵀX', X'ᵀX'} calibration GEMMs
+- ``flash_attention`` — blockwise online-softmax attention (causal/window/GQA)
+
+``ops`` holds the jit'd dispatch wrappers (Pallas on TPU, jnp refs on CPU);
+``ref`` the pure-jnp oracles the tests sweep against.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,70 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, interpret/XLA fallback elsewhere.
+
+``use_pallas()`` decides per-backend: real Mosaic lowering on TPU, the
+pure-jnp reference on CPU/GPU (tests exercise the kernels explicitly with
+``interpret=True``).  All wrappers pad shapes to kernel block multiples and
+slice back, so call sites never worry about alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cov_accum import cov_accum as _cov_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
+
+
+def use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_dim(x, axis: int, multiple: int):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def lowrank_matmul(x, v, u, *, force_pallas: bool = False,
+                   interpret: bool = False):
+    """y = (x @ v) @ u.  x: (..., n); v: (n, k); u: (k, m)."""
+    if not (use_pallas() or force_pallas):
+        return ref.lowrank_matmul_ref(x, v, u)
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    xf, t0 = _pad_dim(xf, 0, 256)
+    v, _ = _pad_dim(v, 1, 128)
+    u, _ = _pad_dim(u, 0, 128)
+    u, m0 = _pad_dim(u, 1, 256)
+    y = _lowrank_kernel(xf, v, u, bt=256, bn=min(512, xf.shape[1]),
+                        bm=256, interpret=interpret)
+    return y[:t0, :m0].reshape(*lead, m0)
+
+
+def cov_accum(x, xp, *, force_pallas: bool = False, interpret: bool = False):
+    """(T, n) x2 -> (xx, xxp, xpxp) fp32.  Token padding is exact (zero rows)."""
+    if not (use_pallas() or force_pallas):
+        return ref.cov_accum_ref(x, xp)
+    n = x.shape[-1]
+    x, _ = _pad_dim(x.reshape(-1, n), 0, 512)
+    xp, _ = _pad_dim(xp.reshape(-1, n), 0, 512)
+    bi = 256 if n % 256 == 0 else n
+    return _cov_kernel(x, xp, bi=bi, bt=512, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    force_pallas: bool = False, interpret: bool = False):
+    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D)."""
+    if not (use_pallas() or force_pallas):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_kernel(q, k, v, causal=causal, window=window,
+                         bq=min(256, q.shape[2]), bk=min(256, k.shape[2]),
+                         interpret=interpret)

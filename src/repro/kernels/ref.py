@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_matmul_ref(x, v, u):
+    """y = (x @ v) @ u with fp32 accumulation."""
+    t = jnp.dot(x, v, preferred_element_type=jnp.float32)
+    return jnp.dot(t.astype(u.dtype), u,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def cov_accum_ref(x, xp):
+    xf = x.astype(jnp.float32)
+    xpf = xp.astype(jnp.float32)
+    return xf.T @ xf, xf.T @ xpf, xpf.T @ xpf
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D).  Dense softmax reference."""
+    b, h, lq, d = q.shape
+    _, kv, lk, _ = k.shape
+    g = h // kv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(lq)[:, None]
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

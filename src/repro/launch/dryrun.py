@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+# ^ MUST precede any jax import (jax locks the device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, into artifacts/dryrun/<cell>.json:
+  * compile success, wall time
+  * compiled.memory_analysis()  (per-device bytes: proves it fits / doesn't)
+  * compiled.cost_analysis()    (XLA's own numbers, loop bodies counted once)
+  * our HLO-derived roofline inputs (repro.launch.hlo_analysis): flops,
+    hbm bytes, collective wire bytes by kind — with while-loop trip counts
+  * the derived three roofline terms (see repro.launch.roofline)
+
+Usage:
+  python -m repro.launch.dryrun --arch llama-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch llama-7b --shape decode_32k --ratio 0.6
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ALL_ARCHS, SHAPES_BY_NAME, get_config
+from repro.launch import hlo_analysis as H
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+
+
+def cell_skip_reason(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 500k dense-KV decode out of scope "
+                "(DESIGN.md §Arch-applicability)")
+    return None
+
+
+def lower_cell(cfg, shape, mesh):
+    """Returns (lowered, donate_info) for the cell's step function."""
+    if shape.kind == "train":
+        state_struct = S.train_state_struct(cfg)
+        batch_struct = S.train_batch_struct(cfg, shape)
+        state_sh, batch_sh = S.train_shardings(cfg, mesh, state_struct,
+                                               batch_struct)
+        step = S.make_train_step(cfg, mesh)
+        return jax.jit(step, in_shardings=(state_sh, batch_sh),
+                       out_shardings=(state_sh, None),
+                       donate_argnums=(0,)).lower(state_struct, batch_struct)
+    if shape.kind == "prefill":
+        params, batch, cache = S.prefill_inputs_struct(cfg, shape)
+        psh, csh = S.decode_shardings(cfg, mesh, params, cache, mode="use")
+        bsh = __import__("repro.distributed.sharding",
+                         fromlist=["batch_shardings"]).batch_shardings(batch, mesh)
+        step = S.make_prefill_step(cfg, mesh)
+        return jax.jit(step, in_shardings=(psh, bsh, csh),
+                       out_shardings=(None, csh),
+                       donate_argnums=(2,)).lower(params, batch, cache)
+    params, cache, tokens, pos = S.decode_inputs_struct(cfg, shape)
+    psh, csh = S.decode_shardings(cfg, mesh, params, cache)
+    from repro.distributed import sharding as SH
+    tsh = SH.tree_shardings(tokens, mesh, lambda p, s: SH.batch_spec(p, s, mesh))
+    step = S.make_serve_step(cfg, mesh)
+    return jax.jit(step, in_shardings=(psh, csh, tsh, SH.replicated(mesh)),
+                   out_shardings=(None, csh),
+                   donate_argnums=(1,)).lower(params, cache, tokens, pos)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             ratio: float = 1.0, outdir: str = "artifacts/dryrun",
+             verbose: bool = True) -> dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    cfg = get_config(arch)
+    if ratio < 1.0:
+        cfg = cfg.replace(compress_ratio=ratio)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell = f"{arch}__{shape_name}__{mesh_name}" + (
+        f"__r{ratio:g}" if ratio < 1.0 else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "ratio": ratio, "cell": cell}
+
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        result["status"] = "skipped"
+        result["reason"] = reason
+        _dump(result, outdir, cell)
+        if verbose:
+            print(f"[dryrun] {cell}: SKIP ({reason})")
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        costs = H.analyze(hlo_text, total_devices=mesh.devices.size)
+        result.update(
+            status="ok",
+            lower_seconds=round(t_lower, 2),
+            compile_seconds=round(t_compile, 2),
+            memory_analysis=_mem_dict(mem),
+            xla_cost_analysis={k: v for k, v in cost.items()
+                               if k in ("flops", "bytes accessed",
+                                        "transcendentals")},
+            hlo_costs=costs.as_dict(),
+            num_devices=int(mesh.devices.size),
+        )
+        result["roofline"] = RL.roofline_terms(result, cfg, shape)
+        if verbose:
+            r = result["roofline"]
+            print(f"[dryrun] {cell}: OK lower {t_lower:.1f}s compile "
+                  f"{t_compile:.1f}s | compute {r['compute_s']:.2e}s "
+                  f"memory {r['memory_s']:.2e}s collective "
+                  f"{r['collective_s']:.2e}s -> {r['bottleneck']}")
+    except Exception as exc:  # noqa: BLE001 — report, don't crash the sweep
+        result["status"] = "error"
+        result["error"] = f"{type(exc).__name__}: {exc}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(f"[dryrun] {cell}: ERROR {result['error']}")
+    _dump(result, outdir, cell)
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = int(getattr(mem, attr))
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def _dump(result: dict, outdir: str, cell: str):
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"{cell}.json")
+    slim = {k: v for k, v in result.items() if k != "traceback"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every assigned (arch x shape) cell")
+    ap.add_argument("--ratio", type=float, default=1.0,
+                    help="AA-SVD compression ratio (<1 = factorized weights)")
+    ap.add_argument("--outdir", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        archs = [a for a in ALL_ARCHS if a != "llama-7b"]
+        shapes = list(SHAPES_BY_NAME)
+    else:
+        archs = [args.arch] if args.arch else ALL_ARCHS
+        shapes = [args.shape] if args.shape else list(SHAPES_BY_NAME)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multipod_2x16x16" if mp else "pod_16x16"
+                cell = f"{arch}__{shape}__{mesh_name}" + (
+                    f"__r{args.ratio:g}" if args.ratio < 1.0 else "")
+                path = os.path.join(args.outdir, f"{cell}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[dryrun] {cell}: cached")
+                            continue
+                res = run_cell(arch, shape, mp, ratio=args.ratio,
+                               outdir=args.outdir)
+                failures += res["status"] == "error"
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — jax locks the device count on first backend init, and the
+dry-run must set XLA_FLAGS before that happens.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
+    axis (data parallelism across the inter-pod DCN/ICI boundary)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Degenerate mesh over the actually-available devices (tests, examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

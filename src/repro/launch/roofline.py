@@ -1,0 +1,114 @@
+"""Roofline-term derivation from dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_wire_bytes_per_device / ICI_bw
+
+Post-SPMD HLO shapes are per-device, so the analyzer's numbers are already
+per-chip.  MODEL_FLOPS (the "useful" compute) is 6·N·D for training and
+2·N·D forward-only, with N = active params for MoE; the ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+# TPU v5e per chip
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.active_param_count()
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention score/value FLOPs (dense KV): 2 sides × 2 ops × h·hd·L_kv
+    if cfg.attention != "none":
+        lkv = shape.seq_len
+        h, hd = cfg.num_heads, cfg.head_dim
+        att = 2 * 2 * h * hd * lkv * tokens * cfg.num_layers
+        if cfg.attention == "sliding_mix":
+            n_global = cfg.num_layers // cfg.global_every
+            att = (2 * 2 * h * hd * tokens
+                   * (n_global * lkv
+                      + (cfg.num_layers - n_global) * min(cfg.sliding_window, lkv)))
+        if cfg.family == "hybrid":
+            att = 2 * 2 * h * hd * lkv * tokens * (
+                cfg.num_layers // cfg.hybrid_attn_every)
+        att *= 3.0 if shape.kind == "train" else 1.0
+        flops += att * (0.5 if shape.kind != "decode" else 1.0)  # causal half
+    return flops
+
+
+def roofline_terms(result: Dict, cfg=None, shape=None) -> Dict:
+    hc = result["hlo_costs"]
+    compute_s = hc["flops"] / PEAK_FLOPS_BF16
+    memory_s = hc["hbm_bytes"] / HBM_BW
+    collective_s = hc["collective_bytes"] / ICI_BW_PER_LINK
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(compute_s, memory_s, collective_s)
+    out = dict(terms)
+    out["bottleneck"] = bottleneck.replace("_s", "")
+    out["step_time_lower_bound_s"] = step_s
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        total_hlo = hc["flops"] * result.get("num_devices", 1)
+        out["model_flops"] = mf
+        out["useful_flops_frac"] = mf / total_hlo if total_hlo else 0.0
+        # fraction of roofline: useful model flops per chip over peak,
+        # relative to the step lower bound
+        chips = result.get("num_devices", 1)
+        ideal_s = mf / chips / PEAK_FLOPS_BF16
+        out["roofline_fraction"] = ideal_s / step_s if step_s else 0.0
+    return out
+
+
+def load_cells(outdir: str = "artifacts/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(outdir: str = "artifacts/dryrun", mesh: Optional[str] = "pod_16x16"
+          ) -> str:
+    """Render the §Roofline markdown table from dry-run artifacts."""
+    rows = []
+    header = ("| cell | status | compute s | memory s | collective s | "
+              "bottleneck | useful-FLOPs frac | roofline frac |")
+    sep = "|" + "---|" * 8
+    for cell in load_cells(outdir):
+        if mesh and cell.get("mesh") != mesh:
+            continue
+        name = f"{cell['arch']} × {cell['shape']}"
+        if cell.get("ratio", 1.0) < 1.0:
+            name += f" (ratio {cell['ratio']:g})"
+        if cell["status"] == "skipped":
+            rows.append(f"| {name} | skip | – | – | – | – | – | – |")
+            continue
+        if cell["status"] != "ok":
+            rows.append(f"| {name} | ERROR | – | – | – | – | – | – |")
+            continue
+        r = cell["roofline"]
+        rows.append(
+            f"| {name} | ok | {r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['bottleneck']} | "
+            f"{r.get('useful_flops_frac', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join([header, sep] + rows)
+
+
+if __name__ == "__main__":
+    import sys
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "pod_16x16"
+    print(table(outdir, None if mesh == "all" else mesh))

@@ -1,0 +1,217 @@
+"""Jittable step functions + input specs for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for the dry-run; the same builders are
+used with real arrays by train.py / serve.py.
+
+Step kinds per assigned shape:
+  train_*    -> train_step(state, batch)            fwd + bwd + AdamW
+  prefill_*  -> prefill_step(params, batch, cache)  prompt pass, cache fill
+  decode_* / long_* -> serve_step(params, cache, tokens, pos)
+                       one new token against a seq_len KV cache
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as SH
+from repro.models import model as M
+from repro.optim import adamw
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(cfg, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_struct(cfg) -> TrainState:
+    """Structure-only state (no allocation) for dry-run lowering."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_struct(cfg, shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, l = shape.global_batch, shape.seq_len
+    batch = {"labels": _sds((b, l), jnp.int32)}
+    if cfg.frontend == "vision":
+        batch["tokens"] = _sds((b, l - cfg.num_patches), jnp.int32)
+        batch["patches"] = _sds((b, cfg.num_patches, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    else:
+        batch["tokens"] = _sds((b, l), jnp.int32)
+    if cfg.frontend == "audio":
+        batch["frames"] = _sds((b, cfg.encoder_seq_len, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    return batch
+
+
+def _serve_params_struct(cfg):
+    def build():
+        p = M.init_params(cfg.replace(param_dtype=cfg.dtype),
+                          jax.random.PRNGKey(0))
+        if cfg.compress_ratio < 1.0:   # AA-SVD factorized deployment
+            from repro.core.factorized import factorize_params
+            p = factorize_params(p, cfg)
+        return p
+
+    return jax.eval_shape(build)
+
+
+def decode_inputs_struct(cfg, shape):
+    """(params, cache, tokens, pos) structures for serve_step lowering."""
+    b, l = shape.global_batch, shape.seq_len
+    params = _serve_params_struct(cfg)
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, l))
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return params, cache, tokens, pos
+
+
+def prefill_inputs_struct(cfg, shape):
+    params = _serve_params_struct(cfg)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    batch = train_batch_struct(cfg, shape)
+    batch.pop("labels")
+    return params, batch, cache
+
+
+def input_specs(cfg, shape):
+    """Assignment entry point: stand-ins for every model input of the cell."""
+    if shape.kind == "train":
+        return {"state": train_state_struct(cfg),
+                "batch": train_batch_struct(cfg, shape)}
+    if shape.kind == "prefill":
+        params, batch, cache = prefill_inputs_struct(cfg, shape)
+        return {"params": params, "batch": batch, "cache": cache}
+    params, cache, tokens, pos = decode_inputs_struct(cfg, shape)
+    return {"params": params, "cache": cache, "tokens": tokens, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+
+
+def make_train_step(cfg, mesh, *, optimizer: Optional[adamw.AdamWConfig] = None,
+                    lr_schedule=None):
+    ocfg = optimizer or adamw.AdamWConfig(lr=3e-4, weight_decay=0.01)
+    constrain = _make_constrain(mesh)
+
+    def train_step(state: TrainState, batch):
+        with SH.use_mesh(mesh, cfg=cfg):
+            def loss_of(p):
+                loss, metrics = M.loss_fn(p, cfg, batch, constrain=constrain)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state.params)
+            # land grads directly in the optimizer-state layout (otherwise
+            # GSPMD re-shards at the AdamW boundary — 80 GiB all-gathers of
+            # kimi's expert banks just to square them)
+            if mesh is not None:
+                grads = jax.tree.map(
+                    jax.lax.with_sharding_constraint, grads,
+                    SH.param_shardings(grads, mesh, cfg=cfg))
+            lr_scale = (lr_schedule(state.step)
+                        if lr_schedule is not None else 1.0)
+            new_params, opt, om = adamw.update(grads, state.opt,
+                                               state.params, ocfg, lr_scale)
+            metrics = dict(metrics, loss=loss, **om)
+            return TrainState(new_params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, mesh):
+    constrain = _make_constrain(mesh)
+
+    def prefill_step(params, batch, cache):
+        # prefill computes over L tokens: col/row-split factor layout (no
+        # per-linear psum); decode keeps rank-split. Disaggregated serving
+        # keeps the two phases on separately-laid-out replicas.
+        with SH.use_mesh(mesh, mode="use", cfg=cfg):
+            logits, cache = M.prefill(params, cfg, batch, cache,
+                                      constrain=constrain)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg, mesh):
+    """One greedy decode step: token at ``pos`` in, token at pos+1 out."""
+    constrain = _make_constrain(mesh)
+
+    def serve_step(params, cache, tokens, pos):
+        with SH.use_mesh(mesh, mode="serve", cfg=cfg):
+            logits, cache = M.decode_step(params, cfg, cache, tokens, pos,
+                                          constrain=constrain)
+            return (jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32),
+                    cache)
+
+    return serve_step
+
+
+def _make_constrain(mesh):
+    if mesh is None:
+        return None
+    spec = SH.activation_spec(mesh)
+
+    def constrain(x):
+        if x.ndim == 3 and x.shape[0] % SH._axis_size(
+                mesh, SH.dp_axes(mesh)) == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# sharding plans per cell
+
+
+def train_shardings(cfg, mesh, state_struct, batch_struct):
+    psh = SH.param_shardings(state_struct.params, mesh, cfg=cfg)
+    state_sh = TrainState(
+        params=psh,
+        opt=adamw.AdamWState(
+            step=SH.replicated(mesh),
+            m=SH.param_shardings(state_struct.opt.m, mesh, cfg=cfg),
+            v=SH.param_shardings(state_struct.opt.v, mesh, cfg=cfg)),
+        step=SH.replicated(mesh))
+    batch_sh = SH.batch_shardings(batch_struct, mesh)
+    return state_sh, batch_sh
+
+
+def decode_shardings(cfg, mesh, params_struct, cache_struct,
+                     mode: str = "serve"):
+    # serving keeps weights resident in an fsdp-stripped layout: pure TP,
+    # no per-step weight gathers (perf iteration C1).  Decode uses the
+    # rank-split factor layout ("serve"); prefill the col/row-split ("use")
+    # — disaggregated-serving replicas (perf iteration C4).
+    psh = SH.param_shardings(params_struct, mesh, mode=mode, cfg=cfg)
+    csh = SH.cache_shardings(cache_struct, cfg, mesh)
+    return psh, csh

@@ -1,0 +1,9 @@
+from repro.models import attention, blocks, layers, mlp, model, ssm  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward_hidden,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)

@@ -1,0 +1,224 @@
+"""Shared primitives: norms, RoPE, linear (dense or factorized), chunked CE.
+
+All modules are functional: params are plain pytrees (nested dicts of
+jnp arrays), apply functions are pure.  A "linear" param dict holds either
+
+  {"w": (in, out)}                      dense
+  {"u": (k, out), "v": (in, k)}         AA-SVD factorized  (W' = U Vᵀ in the
+                                        paper's row convention; here applied
+                                        as y = (x @ v) @ u)
+
+optionally plus {"b": (out,)}.  Every linear in the model zoo goes through
+``linear()`` so the paper's compression is a drop-in parameter swap.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# activation taps ("sow"): calibration capture for AA-SVD.
+#
+# Forward functions call ``sow(name, x)`` at every linear-layer input.  When a
+# ``sowing(store)`` context is active the activation (a tracer, under jit) is
+# recorded under "<scope>/<name>"; the jitted capture function returns the
+# store so values materialize as ordinary outputs.  Zero overhead when no
+# store is active.
+
+_SOW_STORE: Optional[Dict[str, jnp.ndarray]] = None
+_SCOPE: list = []
+
+
+@contextlib.contextmanager
+def sowing(store: Dict[str, jnp.ndarray]):
+    global _SOW_STORE
+    prev = _SOW_STORE
+    _SOW_STORE = store
+    try:
+        yield store
+    finally:
+        _SOW_STORE = prev
+
+
+@contextlib.contextmanager
+def scope(name: str):
+    _SCOPE.append(name)
+    try:
+        yield
+    finally:
+        _SCOPE.pop()
+
+
+def sow(name: str, x) -> None:
+    if _SOW_STORE is not None:
+        _SOW_STORE["/".join(_SCOPE + [name])] = x
+
+
+# ---------------------------------------------------------------------------
+# linear
+
+
+def linear_init(key, d_in: int, d_out: int, *, dtype=jnp.float32,
+                scale: Optional[float] = None, bias: bool = False):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, *, dtype=None):
+    """y = x @ W (+ b); W dense or factorized (u, v)."""
+    if dtype is None:
+        dtype = x.dtype
+    if "w" in p:
+        y = x @ p["w"].astype(dtype)
+    else:
+        # factorized: keep the rank-k intermediate in the compute dtype
+        y = (x @ p["v"].astype(dtype)) @ p["u"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def linear_out_dim(p) -> int:
+    return p["w"].shape[-1] if "w" in p else p["u"].shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def norm_init(d: int, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+
+
+def rope_table(positions, head_dim: int, theta: float):
+    """cos/sin tables for given integer positions.  -> (L, head_dim//2) each."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (L, half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., L, H, D); cos/sin: (L, D//2) — rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., :, None, :]  # broadcast over heads
+    s = sin[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+
+
+def act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (vocab-sharded friendly, O(chunk × vocab) memory)
+
+
+def chunked_cross_entropy(hidden, head_p, targets, *, chunk: int = 512,
+                          z_loss: float = 0.0, vocab_pad: int = 512):
+    """Mean CE of next-token prediction, computed per sequence chunk.
+
+    hidden: (B, L, d) final hidden states;  head_p: linear params (d -> V);
+    targets: (B, L) int32.  Returns scalar mean loss (fp32).
+
+    ``vocab_pad`` (perf iteration A3): odd vocab sizes (49155, 51865, …)
+    cannot shard over a 16/32-way model axis, so GSPMD replicates the
+    (B, chunk, V) fp32 logits and all-reduces them.  Zero-padding the head
+    to a multiple of 512 keeps logits model-sharded; padded columns are
+    masked to -inf before the logsumexp (exactly equivalent loss).
+    """
+    from repro.distributed import sharding as SH
+
+    b, l, d = hidden.shape
+    chunk = min(chunk, l)
+    n = l // chunk
+    rem = l - n * chunk
+
+    vocab = None
+    if vocab_pad and "w" in head_p:
+        vocab = head_p["w"].shape[-1]
+        vp = -(-vocab // vocab_pad) * vocab_pad
+        if vp != vocab:
+            w = jnp.pad(head_p["w"], ((0, 0), (0, vp - vocab)))
+            head_p = dict(head_p, w=SH.hint(w, None, "model"))
+        else:
+            vocab = None  # already aligned — no masking needed
+
+    def chunk_loss(h_c, t_c):
+        logits = linear(head_p, h_c.astype(jnp.float32), dtype=jnp.float32)
+        logits = SH.hint(logits, "dp", None, "model")
+        if vocab is not None:
+            pad_mask = jnp.arange(logits.shape[-1]) >= vocab
+            logits = jnp.where(pad_mask[None, None], -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(logz - gold)
+        if z_loss:
+            loss = loss + z_loss * jnp.sum(jnp.square(logz))
+        return loss
+
+    if n > 0:
+        hs = hidden[:, : n * chunk].reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+        ts = targets[:, : n * chunk].reshape(b, n, chunk).transpose(1, 0, 2)
+
+        def body(tot, xs):
+            h_c, t_c = xs
+            return tot + chunk_loss(h_c, t_c), None
+
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ts))
+    else:
+        total = jnp.zeros((), jnp.float32)
+    if rem:
+        total = total + chunk_loss(hidden[:, n * chunk:], targets[:, n * chunk:])
+    return total / (b * l)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens, dtype):
+    return p["table"].astype(dtype)[tokens]

@@ -1,0 +1,325 @@
+"""Top-level model: embed → stage program → final norm → head.
+
+Functional API (no framework):
+    init_params(cfg, key)                         -> params pytree
+    loss_fn(params, cfg, batch)                   -> (loss, metrics)
+    init_cache(cfg, batch, max_len)               -> cache pytree
+    prefill(params, cfg, batch, cache)            -> (logits_last, cache)
+    decode_step(params, cfg, cache, tokens, pos)  -> (logits, cache)
+
+Batches are dicts: ``tokens`` (B, Lt) int32, ``labels`` (B, L) int32 for
+training; VLM adds ``patches`` (B, P, d) (stub frontend: precomputed patch
+embeddings); enc-dec adds ``frames`` (B, Le, d) (stub audio frontend).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+
+
+def init_params(cfg, key) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.embedding_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.linear_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                          dtype=dtype)
+
+    def init_stage(stage: B.Stage, key):
+        ks = jax.random.split(key, len(stage.kinds))
+        stage_params = []
+        for kind, k in zip(stage.kinds, ks):
+            if kind in B.SHARED_KINDS:
+                stage_params.append(None)
+                continue
+            if stage.scan and stage.n > 1:
+                stage_params.append(
+                    jax.vmap(lambda kk: B.init_sub_block(kind, kk, cfg))(
+                        jax.random.split(k, stage.n)))
+            else:
+                stage_params.append(B.init_sub_block(kind, k, cfg))
+        return stage_params
+
+    stages = B.stage_program(cfg)
+    skeys = jax.random.split(keys[2], len(stages))
+    params["stages"] = [init_stage(st, k) for st, k in zip(stages, skeys)]
+
+    shared_kinds = sorted({k for st in stages for k in st.kinds
+                           if k in B.SHARED_KINDS})
+    if shared_kinds:
+        params["shared"] = {
+            kind: B.init_sub_block(kind, k, cfg)
+            for kind, k in zip(shared_kinds,
+                               jax.random.split(keys[3], len(shared_kinds)))}
+
+    enc_stages = B.encoder_stages(cfg)
+    if enc_stages:
+        ekeys = jax.random.split(keys[4], len(enc_stages))
+        params["encoder"] = {
+            "stages": [init_stage(st, k) for st, k in zip(enc_stages, ekeys)],
+            "final_norm": L.norm_init(cfg.d_model, cfg.norm),
+        }
+    params = _cast_floats(params, dtype)
+    return params
+
+
+def _cast_floats(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# context (rope tables etc.)
+
+
+def _rope_dim(cfg) -> int:
+    if cfg.mla is not None and cfg.mla.kv_lora_rank:
+        return cfg.mla.qk_rope_head_dim
+    return cfg.head_dim
+
+
+def make_ctx(cfg, positions, *, constrain=None) -> Dict[str, Any]:
+    ctx: Dict[str, Any] = {"constrain": constrain or (lambda x: x)}
+    rd = _rope_dim(cfg)
+    ctx["cos"], ctx["sin"] = L.rope_table(positions, rd, cfg.rope_theta)
+    if cfg.rope_theta_global:
+        ctx["cos_global"], ctx["sin_global"] = L.rope_table(
+            positions, rd, cfg.rope_theta_global)
+    return ctx
+
+
+def sinusoid_positions(positions, d):
+    half = d // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# stage execution: forward (no cache)
+
+
+def _run_stage_forward(stage: B.Stage, stage_params, shared, x, cfg, ctx,
+                       train: bool):
+    from repro.distributed import sharding as SH
+
+    def iteration(x, per_kind_params):
+        aux = jnp.zeros((), jnp.float32)
+        for kind, p in zip(stage.kinds, per_kind_params):
+            if kind in B.SHARED_KINDS:
+                p = shared[kind]
+            p = SH.param_use_hints(p)   # ZeRO-3: per-layer weight gather
+            x, a = B.apply_sub_block(kind, p, x, cfg, ctx)
+            aux = aux + a
+        return ctx["constrain"](x), aux
+
+    if stage.scan and stage.n > 1:
+        def body(carry, xs):
+            x, aux = carry
+            x, a = iteration(x, xs)
+            return (x, aux + a), None
+
+        if train and cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   tuple(stage_params))
+        return x, aux
+    x, aux = iteration(x, stage_params)
+    return x, aux
+
+
+def _embed_inputs(params, cfg, batch):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dtype), x], axis=1)
+    return x
+
+
+def _run_encoder(params, cfg, frames, train: bool):
+    dtype = jnp.dtype(cfg.dtype)
+    le = frames.shape[1]
+    x = frames.astype(dtype) + sinusoid_positions(
+        jnp.arange(le), cfg.d_model).astype(dtype)[None]
+    ctx = make_ctx(cfg, jnp.arange(le))
+    for st, sp in zip(B.encoder_stages(cfg), params["encoder"]["stages"]):
+        x, _ = _run_stage_forward(st, sp, {}, x, cfg, ctx, train)
+    return L.apply_norm(params["encoder"]["final_norm"], x, eps=cfg.norm_eps)
+
+
+def forward_hidden(params, cfg, batch, *, train: bool = True, constrain=None):
+    """Returns (hidden (B, L, d), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    l = x.shape[1]
+    ctx = make_ctx(cfg, jnp.arange(l), constrain=constrain)
+    if cfg.family == "encdec":
+        ctx["enc_out"] = _run_encoder(params, cfg, batch["frames"], train)
+        x = x + sinusoid_positions(jnp.arange(l), cfg.d_model).astype(x.dtype)[None]
+    x = ctx["constrain"](x)
+    aux = jnp.zeros((), jnp.float32)
+    for st, sp in zip(B.stage_program(cfg), params["stages"]):
+        x, a = _run_stage_forward(st, sp, params.get("shared", {}), x, cfg,
+                                  ctx, train)
+        aux = aux + a
+    return L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps), aux
+
+
+def _head_params(params, cfg):
+    if cfg.tie_embeddings:
+        return {"w": params["embed"]["table"].T}
+    return params["lm_head"]
+
+
+def loss_fn(params, cfg, batch, *, constrain=None):
+    hidden, aux = forward_hidden(params, cfg, batch, train=True,
+                                 constrain=constrain)
+    ce = L.chunked_cross_entropy(hidden, _head_params(params, cfg),
+                                 batch["labels"], chunk=cfg.logits_chunk)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def logits_from_hidden(params, cfg, hidden):
+    return L.linear(_head_params(params, cfg), hidden.astype(jnp.float32),
+                    dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+
+def init_cache(cfg, batch: int, max_len: int) -> PyTree:
+    dtype = jnp.dtype(cfg.dtype)
+    cache = []
+    for st in B.stage_program(cfg):
+        per_kind = []
+        for kind in st.kinds:
+            c = B.init_sub_cache(kind, cfg, batch, max_len, dtype)
+            if st.scan and st.n > 1:
+                c = jax.tree.map(
+                    lambda x: jnp.zeros((st.n,) + x.shape, x.dtype), c)
+            per_kind.append(c)
+        cache.append(per_kind)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+
+
+def _run_stage_cached(stage: B.Stage, stage_params, shared, x, stage_cache,
+                      cfg, ctx, fn):
+    """fn = B.prefill_sub_block (returns x, cache, aux) or decode wrapper."""
+
+    from repro.distributed import sharding as SH
+
+    def iteration(x, per_kind_params, per_kind_cache):
+        new_cache = []
+        aux = jnp.zeros((), jnp.float32)
+        for kind, p, c in zip(stage.kinds, per_kind_params, per_kind_cache):
+            if kind in B.SHARED_KINDS:
+                p = shared[kind]
+            p = SH.param_use_hints(p)
+            out = fn(kind, p, x, c, cfg, ctx)
+            if len(out) == 3:
+                x, c, a = out
+                aux = aux + a
+            else:
+                x, c = out
+            new_cache.append(c)
+        return ctx["constrain"](x), new_cache, aux
+
+    if stage.scan and stage.n > 1:
+        # fori_loop with the stacked cache as loop CARRY (perf iteration C2):
+        # lax.scan would thread the cache through xs→ys, which XLA cannot
+        # alias — a full O(cache) copy per layer per decode step (528 GiB per
+        # token on llama decode_32k).  Carried-buffer dynamic updates alias
+        # in place; stacked layer params are dynamic-index reads (slice-only
+        # traffic).
+        def body(i, val):
+            x, cache, aux = val
+            p_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False),
+                tuple(stage_params))
+            c_i = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                       keepdims=False),
+                cache)
+            x, c_new, a = iteration(x, list(p_i), list(c_i))
+            cache = jax.tree.map(
+                lambda buf, upd: jax.lax.dynamic_update_index_in_dim(
+                    buf, upd.astype(buf.dtype), i, 0),
+                cache, tuple(c_new))
+            return x, cache, aux + a
+
+        x, new_cache, aux = jax.lax.fori_loop(
+            0, stage.n, body,
+            (x, tuple(stage_cache), jnp.zeros((), jnp.float32)))
+        return x, list(new_cache), aux
+    x, new_cache, aux = iteration(x, stage_params, stage_cache)
+    return x, new_cache, aux
+
+
+def prefill(params, cfg, batch, cache, *, pos: int = 0, constrain=None):
+    """Run the prompt, fill caches.  Returns (last-token logits, cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    l = x.shape[1]
+    ctx = make_ctx(cfg, pos + jnp.arange(l), constrain=constrain)
+    ctx["pos"] = pos
+    if cfg.family == "encdec":
+        ctx["enc_out"] = _run_encoder(params, cfg, batch["frames"], False)
+        x = x + sinusoid_positions(pos + jnp.arange(l),
+                                   cfg.d_model).astype(x.dtype)[None]
+    x = ctx["constrain"](x)
+    new_cache = []
+    for st, sp, sc in zip(B.stage_program(cfg), params["stages"], cache):
+        x, c, _ = _run_stage_cached(st, sp, params.get("shared", {}), x, sc,
+                                    cfg, ctx, B.prefill_sub_block)
+        new_cache.append(c)
+    hidden = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, constrain=None):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (0-based
+    absolute position of this token).  Returns (logits (B, V), new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed(params["embed"], tokens, dtype)
+    positions = jnp.atleast_1d(pos)
+    ctx = make_ctx(cfg, positions, constrain=constrain)
+    ctx["pos"] = pos
+    if cfg.family == "encdec":
+        x = x + sinusoid_positions(positions, cfg.d_model).astype(dtype)[None]
+    x = ctx["constrain"](x)
+
+    def dec(kind, p, x, c, cfg, ctx):
+        return B.decode_sub_block(kind, p, x, c, cfg, ctx)
+
+    new_cache = []
+    for st, sp, sc in zip(B.stage_program(cfg), params["stages"], cache):
+        x, c, _ = _run_stage_cached(st, sp, params.get("shared", {}), x, sc,
+                                    cfg, ctx, dec)
+        new_cache.append(c)
+    hidden = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, hidden)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,322 @@
+"""State-space blocks: Mamba1 (chunk-recurrent selective scan) and Mamba2 (SSD).
+
+TPU adaptation (DESIGN.md §3): Mamba2 uses the SSD *chunked matmul*
+decomposition — intra-chunk attention-like dense einsums on the MXU plus a
+sequential inter-chunk state pass — instead of the GPU warp-level scan.
+Mamba1 keeps the elementwise recurrence but chunks it: an outer lax.scan over
+chunks (state checkpointed at boundaries, inner chunk rematerialized in the
+backward pass) bounds training memory to O(L/chunk · d_inner · N).
+
+Shapes: x (B, L, d).  Decode carries (ssm_state, conv_state) per layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# shared: causal depthwise conv
+
+
+def causal_conv(x, w, b):
+    """x: (B, L, C); w: (C, W); left-padded causal depthwise conv + silu."""
+    wdt = w.astype(x.dtype)
+    width = w.shape[1]
+    pads = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    l = x.shape[1]
+    out = sum(pads[:, i:i + l] * wdt[:, i] for i in range(width))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def causal_conv_step(x_t, conv_state, w, b):
+    """x_t: (B, C); conv_state: (B, W-1, C) past inputs.  Returns (y_t, new_state)."""
+    wdt = w.astype(x_t.dtype)
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,cw->bc", window, wdt) + b.astype(x_t.dtype)
+    return jax.nn.silu(y), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+
+
+def mamba1_init(key, cfg, dtype=jnp.float32):
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)[None],
+                      (di, 1))
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * di, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, s.conv_width)) /
+                   math.sqrt(s.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.linear_init(ks[2], di, s.dt_rank + 2 * s.state_dim,
+                                dtype=dtype),
+        "dt_proj": L.linear_init(ks[3], s.dt_rank, di, dtype=dtype,
+                                 scale=s.dt_rank ** -0.5),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(a_init).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": L.linear_init(ks[4], di, d, dtype=dtype,
+                                  scale=1.0 / math.sqrt(di * 2 * cfg.num_layers)),
+    }
+
+
+def _mamba1_inputs(p, x, cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    L.sow("in_proj_in", x)
+    xz = L.linear(p["in_proj"], x)
+    xp, z = xz[..., :di], xz[..., di:]
+    xc = causal_conv(xp, p["conv_w"], p["conv_b"])
+    L.sow("x_proj_in", xc)
+    xdb = L.linear(p["x_proj"], xc)
+    dt_low = xdb[..., : s.dt_rank]
+    bs = xdb[..., s.dt_rank: s.dt_rank + s.state_dim]
+    cs = xdb[..., s.dt_rank + s.state_dim:]
+    L.sow("dt_proj_in", dt_low)
+    dt = jax.nn.softplus(
+        L.linear(p["dt_proj"], dt_low).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return xp, xc, z, dt, bs.astype(jnp.float32), cs.astype(jnp.float32)
+
+
+def _tail_conv_state(pre_conv, width: int):
+    """Last (width-1) pre-conv inputs, left-padded when L < width-1."""
+    b, l, c = pre_conv.shape
+    w = width - 1
+    if l >= w:
+        return pre_conv[:, l - w:]
+    return jnp.pad(pre_conv, ((0, 0), (w - l, 0), (0, 0)))
+
+
+def _mamba1_scan_chunk(a, h, xc, dt, bs, cs):
+    """Sequential scan within one chunk.  h: (B, di, N) fp32."""
+
+    def step(h, xs):
+        xc_t, dt_t, b_t, c_t = xs  # (B,di) (B,di) (B,N) (B,N)
+        decay = jnp.exp(dt_t[..., None] * a)            # (B, di, N)
+        h = h * decay + (dt_t * xc_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          bs.transpose(1, 0, 2), cs.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return h, ys.transpose(1, 0, 2)                      # (B, L, di)
+
+
+def mamba1_forward(p, x, cfg, *, return_state: bool = False):
+    """x: (B, L, d) -> (B, L, d).  Chunked scan, inner chunks rematerialized."""
+    s = cfg.ssm
+    b, l, d = x.shape
+    xp, xc, z, dt, bs, cs = _mamba1_inputs(p, x, cfg)
+    di = xc.shape[-1]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    chunk = min(s.chunk, l)
+    n = -(-l // chunk)
+    pad = n * chunk - l
+    if pad:
+        zeros = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        xc_, dt_, bs_, cs_ = map(zeros, (xc.astype(jnp.float32), dt, bs, cs))
+    else:
+        xc_, dt_, bs_, cs_ = xc.astype(jnp.float32), dt, bs, cs
+
+    def to_chunks(t):
+        return t.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+
+    xs = tuple(map(to_chunks, (xc_, dt_, bs_, cs_)))
+
+    @jax.checkpoint
+    def chunk_body(h, xs_c):
+        return _mamba1_scan_chunk(a, h, *xs_c)
+
+    h0 = jnp.zeros((b, di, s.state_dim), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_body, h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n * chunk, di)[:, :l]
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    L.sow("out_proj_in", y)
+    out = L.linear(p["out_proj"], y)
+    if return_state:
+        # padded steps carry dt=0 (identity decay, zero input) so h_final is
+        # exactly the state after the last real token.
+        return out, {"h": h_final, "conv": _tail_conv_state(xp, s.conv_width)}
+    return out
+
+
+def mamba1_init_state(p, cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+    }
+
+
+def mamba1_decode(p, x_t, state, cfg):
+    """x_t: (B, 1, d) -> (B, 1, d) plus updated state."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    xz = L.linear(p["in_proj"], x_t[:, 0])
+    xp, z = xz[..., :di], xz[..., di:]
+    xc, conv = causal_conv_step(xp, state["conv"], p["conv_w"], p["conv_b"])
+    xdb = L.linear(p["x_proj"], xc)
+    dt_low = xdb[..., : s.dt_rank]
+    b_t = xdb[..., s.dt_rank: s.dt_rank + s.state_dim].astype(jnp.float32)
+    c_t = xdb[..., s.dt_rank + s.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        L.linear(p["dt_proj"], dt_low).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h = state["h"] * jnp.exp(dt[..., None] * a) \
+        + (dt * xc.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c_t) \
+        + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    out = L.linear(p["out_proj"], y)[:, None]
+    return out, {"h": h, "conv": conv}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    nh = di // s.head_dim
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * s.state_dim
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * di + 2 * s.state_dim + nh,
+                                 dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, s.conv_width)) /
+                   math.sqrt(s.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.full((nh,), -4.6, dtype),
+        "gate_norm": L.norm_init(di),
+        "out_proj": L.linear_init(ks[2], di, d, dtype=dtype,
+                                  scale=1.0 / math.sqrt(di * 2 * cfg.num_layers)),
+    }
+
+
+def _mamba2_inputs(p, x, cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    L.sow("in_proj_in", x)
+    proj = L.linear(p["in_proj"], x)
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * s.state_dim]
+    dt_raw = proj[..., di + di + 2 * s.state_dim:]
+    return z, xbc, dt_raw, di, nh
+
+
+def _ssd_chunk_body(a, d_skip, hp, carry, xs_c):
+    """One SSD chunk.  carry S: (B, nh, hp, N) fp32."""
+    s_state = carry
+    x_c, b_c, c_c, dt_c = xs_c  # (B,c,nh,hp) (B,c,N) (B,c,N) (B,c,nh)
+    da = dt_c * a                                     # (B, c, nh), <= 0
+    cums = jnp.cumsum(da, axis=1)                     # (B, c, nh)
+    # intra-chunk (attention-like): w[i,j] = (C_i·B_j)·exp(cums_i-cums_j)·dt_j
+    cb = jnp.einsum("bin,bjn->bij", c_c, b_c)         # (B, c, c)
+    dec = jnp.exp(cums[:, :, None, :] - cums[:, None, :, :])  # (B,c,c,nh)
+    ii = jnp.arange(x_c.shape[1])
+    causal = (ii[:, None] >= ii[None, :]).astype(dec.dtype)
+    w = cb[..., None] * dec * causal[None, :, :, None] * dt_c[:, None, :, :]
+    y = jnp.einsum("bijh,bjhp->bihp", w, x_c)
+    # inter-chunk: contribution of the carried state
+    y = y + jnp.einsum("bin,bhpn->bihp", c_c, s_state) * jnp.exp(cums)[..., None]
+    # state update
+    decay_out = jnp.exp(cums[:, -1:, :] - cums) * dt_c        # (B, c, nh)
+    s_new = s_state * jnp.exp(cums[:, -1])[:, :, None, None] \
+        + jnp.einsum("bjn,bjh,bjhp->bhpn", b_c, decay_out, x_c)
+    y = y + d_skip[None, None, :, None] * x_c
+    return s_new, y
+
+
+def mamba2_forward(p, x, cfg, *, return_state: bool = False):
+    """x: (B, L, d) -> (B, L, d) via SSD chunked matmul decomposition."""
+    s = cfg.ssm
+    b, l, d = x.shape
+    z, xbc_raw, dt_raw, di, nh = _mamba2_inputs(p, x, cfg)
+    xbc = causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xx = xbc[..., :di].astype(jnp.float32)
+    bs = xbc[..., di: di + s.state_dim].astype(jnp.float32)
+    cs = xbc[..., di + s.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, L, nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (nh,)
+    hp = s.head_dim
+
+    chunk = min(s.chunk, l)
+    n = -(-l // chunk)
+    pad = n * chunk - l
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xx, bs, cs, dt = map(zp, (xx, bs, cs, dt))
+
+    xh = xx.reshape(b, n, chunk, nh, hp).transpose(1, 0, 2, 3, 4)
+    bsx = bs.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    csx = cs.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+    dtx = dt.reshape(b, n, chunk, -1).transpose(1, 0, 2, 3)
+
+    body = jax.checkpoint(
+        lambda c, xs: _ssd_chunk_body(a, p["D"].astype(jnp.float32), hp, c, xs))
+    s0 = jnp.zeros((b, nh, hp, s.state_dim), jnp.float32)
+    s_final, ys = jax.lax.scan(body, s0, (xh, bsx, csx, dtx))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n * chunk, di)[:, :l]
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = L.apply_norm(p["gate_norm"], y, eps=cfg.norm_eps)
+    L.sow("out_proj_in", y)
+    out = L.linear(p["out_proj"], y)
+    if return_state:
+        # padded steps carry dt=0 -> identity state updates; state is exact.
+        return out, {"h": s_final,
+                     "conv": _tail_conv_state(xbc_raw, s.conv_width)}
+    return out
+
+
+def mamba2_init_state(p, cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return {
+        "h": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * s.state_dim), dtype),
+    }
+
+
+def mamba2_decode(p, x_t, state, cfg):
+    s = cfg.ssm
+    z, xbc, dt_raw, di, nh = _mamba2_inputs(p, x_t[:, 0:1], cfg)
+    z, xbc, dt_raw = z[:, 0], xbc[:, 0], dt_raw[:, 0]
+    xbc, conv = causal_conv_step(xbc, state["conv"], p["conv_w"], p["conv_b"])
+    xx = xbc[..., :di].astype(jnp.float32)
+    b_t = xbc[..., di: di + s.state_dim].astype(jnp.float32)
+    c_t = xbc[..., di + s.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xx.reshape(-1, nh, s.head_dim)
+    h = state["h"] * jnp.exp(dt * a)[..., None, None] \
+        + (dt[..., None] * xh)[..., None] * b_t[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t) \
+        + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, di).astype(x_t.dtype) * jax.nn.silu(z)
+    y = L.apply_norm(p["gate_norm"], y, eps=cfg.norm_eps)
+    out = L.linear(p["out_proj"], y)[:, None]
+    return out, {"h": h, "conv": conv}

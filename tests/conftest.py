@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run sets its own XLA_FLAGS; never here)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,116 @@
+"""Launch-layer tools: dry-run cell logic, roofline math, refine history."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch import roofline as RL
+
+
+class TestDryrunLogic:
+    def test_long_context_skip_rules(self):
+        from repro.launch.dryrun import cell_skip_reason
+        long = SHAPES_BY_NAME["long_500k"]
+        assert cell_skip_reason(get_config("llama-7b"), long) is not None
+        assert cell_skip_reason(get_config("kimi-k2-1t-a32b"), long) is not None
+        assert cell_skip_reason(get_config("falcon-mamba-7b"), long) is None
+        assert cell_skip_reason(get_config("zamba2-7b"), long) is None
+        assert cell_skip_reason(get_config("gemma3-1b"), long) is None
+        train = SHAPES_BY_NAME["train_4k"]
+        assert cell_skip_reason(get_config("whisper-base"), train) is None
+
+    def test_input_specs_no_allocation(self):
+        """ShapeDtypeStruct stand-ins: zero device allocation."""
+        from repro.launch.steps import input_specs
+        cfg = get_config("qwen3-0.6b")
+        specs = input_specs(cfg, SHAPES_BY_NAME["decode_32k"])
+        leaves = jax.tree.leaves(specs)
+        assert all(isinstance(x, jax.ShapeDtypeStruct) for x in leaves)
+        cache_leaves = jax.tree.leaves(specs["cache"])
+        total = sum(np.prod(x.shape) * x.dtype.itemsize for x in cache_leaves)
+        # 28L × 128 × 32768 × (8×128) × 2 × bf16
+        assert total > 1e11, "cache stand-ins should describe the full cache"
+
+    def test_compressed_specs_smaller(self):
+        from repro.launch.steps import _serve_params_struct
+        cfg = get_config("llama-7b")
+        dense = _serve_params_struct(cfg)
+        comp = _serve_params_struct(cfg.replace(compress_ratio=0.6))
+        size = lambda t: sum(int(np.prod(x.shape)) for x in jax.tree.leaves(t))
+        assert size(comp) < 0.75 * size(dense)
+
+
+class TestRoofline:
+    def cell(self):
+        return {
+            "hlo_costs": {"flops": 1.97e14, "hbm_bytes": 8.19e11,
+                          "collective_bytes": 5e10, "by_collective": {},
+                          "collective_count": {}},
+            "num_devices": 256,
+        }
+
+    def test_terms(self):
+        r = RL.roofline_terms(self.cell())
+        assert r["compute_s"] == pytest.approx(1.0)
+        assert r["memory_s"] == pytest.approx(1.0)
+        assert r["collective_s"] == pytest.approx(1.0)
+        assert r["step_time_lower_bound_s"] == pytest.approx(1.0)
+
+    def test_model_flops_moe_uses_active_params(self):
+        cfg = get_config("kimi-k2-1t-a32b")
+        shape = SHAPES_BY_NAME["train_4k"]
+        mf = RL.model_flops(cfg, shape)
+        dense_equiv = 6 * cfg.param_count() * shape.tokens
+        active = 6 * cfg.active_param_count() * shape.tokens
+        assert mf < 0.2 * dense_equiv
+        assert mf >= active  # plus attention
+
+    def test_table_renders_from_artifacts(self, tmp_path):
+        cell = {"arch": "x", "shape": "train_4k", "mesh": "pod_16x16",
+                "ratio": 1.0, "cell": "x__train_4k__pod_16x16",
+                "status": "ok", "num_devices": 256,
+                "hlo_costs": {"flops": 1e12, "hbm_bytes": 1e10,
+                              "collective_bytes": 1e9, "by_collective": {},
+                              "collective_count": {}}}
+        cell["roofline"] = RL.roofline_terms(cell)
+        with open(tmp_path / "c.json", "w") as f:
+            json.dump(cell, f)
+        table = RL.table(str(tmp_path))
+        assert "x × train_4k" in table and "| ok |" in table
+
+
+class TestRefine:
+    def test_history_and_improvement(self):
+        from repro.core import refine as RF
+        key = jax.random.PRNGKey(0)
+        w_true = jax.random.normal(key, (8, 8))
+        xs = [(jax.random.normal(jax.random.PRNGKey(i), (16, 8)), None)
+              for i in range(3)]
+        ys = [x @ w_true for x, _ in xs]
+        params = {"w": w_true + 0.3 * jax.random.normal(key, (8, 8))}
+        out, hist = RF.refine_unit(lambda p, x, aux: x @ p["w"], params,
+                                   xs, ys, epochs=30, lr=1e-2)
+        assert hist["post_refine_mse"] < hist["pre_refine_mse"] * 0.5
+        assert len(hist["losses"]) == 30
+
+
+class TestServer:
+    def test_generate_shapes_and_determinism(self):
+        from repro.configs import get_smoke_config
+        from repro.data import synthetic_tokens
+        from repro.launch.serve import Server
+        from repro.models import model as M
+        cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_len=48)
+        prompts = synthetic_tokens(jax.random.PRNGKey(1), 2, 12,
+                                   cfg.vocab_size)
+        a = srv.generate(prompts, steps=6)
+        b = srv.generate(prompts, steps=6)
+        assert a.shape == (2, 6)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,139 @@
+"""Per-arch smoke tests (deliverable f): reduced config, one forward/train
+step on CPU, shape + finiteness assertions, prefill/decode consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.models import model as M
+
+B, L = 2, 16
+
+
+def make_batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    total = L + (cfg.num_patches if cfg.frontend == "vision" else 0)
+    batch = {"tokens": jax.random.randint(ks[0], (B, L), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[0], (B, total), 0,
+                                          cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patches"] = 0.02 * jax.random.normal(
+            ks[1], (B, cfg.num_patches, cfg.d_model))
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.02 * jax.random.normal(
+            ks[2], (B, cfg.encoder_seq_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+
+    hidden, aux = M.forward_hidden(params, cfg, batch, train=False)
+    total = L + (cfg.num_patches if cfg.frontend == "vision" else 0)
+    assert hidden.shape == (B, total, cfg.d_model)
+    assert bool(jnp.isfinite(hidden).all()), "NaN/Inf in hidden states"
+
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch)[0])(params)
+    assert np.isfinite(float(loss))
+    assert float(loss) < 2 * np.log(cfg.vocab_size) + 1
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads)), \
+        "non-finite gradient"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    """decode(prefill(prompt)) logits == full-forward logits at last pos.
+
+    MoE archs use Switch capacity dropping (batch-composition dependent), so
+    they are compared with generous capacity via monkeypatched factor.
+    """
+    import functools
+    from repro.models import mlp
+
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, key)
+    batch = make_batch(cfg, key)
+    batch.pop("labels")
+
+    orig = mlp.moe_apply
+    mlp.moe_apply = functools.partial(orig, capacity_factor=64.0)
+    try:
+        hidden, _ = M.forward_hidden(params, cfg, batch, train=False)
+        logits_full = M.logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
+
+        total = hidden.shape[1]
+        cache = M.init_cache(cfg, B, total + 4)
+        b2 = dict(batch)
+        b2["tokens"] = batch["tokens"][:, :-1]
+        _, cache = M.prefill(params, cfg, b2, cache)
+        logits_dec, _ = M.decode_step(params, cfg, cache,
+                                      batch["tokens"][:, -1:], total - 1)
+    finally:
+        mlp.moe_apply = orig
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "falcon-mamba-7b": (64, 4096, 1, 1, 0, 65024),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 10944, 102400),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 18432, 163840),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "llama-7b": (32, 4096, 32, 32, 11008, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "falcon-mamba-7b":
+        assert cfg.ssm.state_dim == 16 and cfg.ssm.version == 1
+    if arch == "zamba2-7b":
+        assert cfg.ssm.state_dim == 64 and cfg.ssm.version == 2
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.mla.kv_lora_rank == 512
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+        assert cfg.moe.d_ff == 1408
+    if arch == "kimi-k2-1t-a32b":
+        assert cfg.moe.num_experts == 384 and cfg.moe.top_k == 8
+        assert cfg.moe.d_ff == 2048
+    if arch == "gemma3-1b":
+        assert cfg.global_every == 6 and cfg.sliding_window == 512
+
+
+def test_kimi_is_about_a_trillion_params():
+    cfg = get_config("kimi-k2-1t-a32b")
+    n = cfg.param_count()
+    assert 0.8e12 < n < 1.3e12, f"{n / 1e12:.2f}T"
+    # assignment specifies GQA kv=8 (not the real K2's MLA), which makes the
+    # active path heavier than the published a32b figure
+    na = cfg.active_param_count()
+    assert 20e9 < na < 60e9, f"{na / 1e9:.1f}B active"
+
+
+def test_param_counts_sane():
+    approx = {"llama-7b": (6e9, 8e9), "granite-3-8b": (7e9, 9.5e9),
+              "phi3-medium-14b": (12e9, 16e9), "qwen3-0.6b": (0.5e9, 0.9e9),
+              "falcon-mamba-7b": (6e9, 8.5e9), "gemma3-1b": (0.9e9, 1.6e9),
+              "whisper-base": (0.05e9, 0.12e9),
+              "deepseek-v2-lite-16b": (12e9, 20e9),
+              "zamba2-7b": (6e9, 9e9)}
+    for arch, (lo, hi) in approx.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n / 1e9:.2f}B not in [{lo / 1e9}, {hi / 1e9}]"

@@ -1,0 +1,171 @@
+"""Algorithm 2 end-to-end: objectives, refinement, ranks, report."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CompressConfig, compress_model
+from repro.core import pipeline as P
+from repro.core import ranks as R
+from repro.core.factorized import factorize_params
+from repro.data import calibration_set
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def setup(arch="llama-7b", n=8, l=32):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = M.init_params(cfg, KEY)
+    calib = calibration_set(cfg, n, l)
+    return cfg, params, calib
+
+
+def eval_loss(params, cfg, calib):
+    batch = {"tokens": calib["tokens"][:4], "labels": calib["tokens"][:4]}
+    for k in ("patches", "frames"):
+        if k in calib:
+            batch[k] = calib[k][:4]
+    return float(M.loss_fn(params, cfg, batch)[0])
+
+
+class TestPipeline:
+    def test_compress_and_run(self):
+        cfg, params, calib = setup()
+        new_params, report = compress_model(
+            params, cfg, calib, CompressConfig(ratio=0.6, refine_epochs=3,
+                                               rank_multiple=1))
+        assert np.isfinite(eval_loss(new_params, cfg, calib))
+        rr = P.compress_ratio_report(params, new_params)
+        assert rr["params_after"] < rr["params_before"]
+        for u in report["units"]:
+            if "post_refine_mse" in u:
+                assert u["post_refine_mse"] <= u["pre_refine_mse"] * 1.05
+
+    def test_refinement_reduces_block_mse(self):
+        cfg, params, calib = setup()
+        _, rep = compress_model(params, cfg, calib,
+                                CompressConfig(ratio=0.5, refine_epochs=5,
+                                               rank_multiple=1))
+        units = [u for u in rep["units"] if "post_refine_mse" in u]
+        improved = sum(u["post_refine_mse"] < u["pre_refine_mse"]
+                       for u in units)
+        assert improved >= len(units) * 0.5
+
+    def test_anchored_beats_agnostic_without_refinement(self):
+        """Paper Table 5: input-agnostic is degenerate; data-driven
+        objectives preserve the model far better (no refinement).
+
+        The ordering only exists for a model with real structure — a random
+        init is isotropic and every rank-k truncation is equally harmless —
+        so train briefly first (the full-strength version of this claim is
+        exercised on the longer-trained model in test_system.py).
+        """
+        import jax as _jax
+        from repro.data import make_batch_iterator
+        from repro.launch import steps as S
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import AdamWConfig
+
+        from repro.optim import adamw
+
+        cfg, params, calib = setup(n=64, l=128)
+        step = _jax.jit(S.make_train_step(cfg, make_host_mesh(),
+                                          optimizer=AdamWConfig(lr=3e-3)))
+        state = S.TrainState(params=params, opt=adamw.init(params),
+                             step=jnp.zeros((), jnp.int32))
+        data = make_batch_iterator(cfg, 8, 64, seed=11)
+        for _ in range(200):
+            state, _m = step(state, next(data))
+        params = state.params
+
+        # held-out evaluation (disjoint seed, 4 × 8 × 64 tokens)
+        evalb = [next(make_batch_iterator(cfg, 8, 64, seed=997))
+                 for _ in range(4)]
+
+        def held_out_loss(p):
+            return float(np.mean([float(M.loss_fn(p, cfg, b)[0])
+                                  for b in evalb]))
+
+        base = held_out_loss(params)
+        out = {}
+        for obj in ("agnostic", "anchored"):
+            newp, _ = compress_model(
+                params, cfg, calib,
+                CompressConfig(ratio=0.6, objective=obj, refine=False,
+                               rank_multiple=1, microbatch=16))
+            out[obj] = held_out_loss(newp)
+        assert out["anchored"] < out["agnostic"], out
+        assert out["anchored"] < base + 3.0
+
+    def test_all_objectives_run(self):
+        cfg, params, calib = setup(n=4, l=16)
+        for obj in ("agnostic", "input_aware", "shift_aware", "anchored"):
+            newp, _ = compress_model(
+                params, cfg, calib,
+                CompressConfig(ratio=0.7, objective=obj, refine=False,
+                               rank_multiple=1))
+            assert np.isfinite(eval_loss(newp, cfg, calib)), obj
+
+    def test_moe_and_hybrid_archs_compress(self):
+        for arch in ("deepseek-v2-lite-16b", "zamba2-7b"):
+            cfg, params, calib = setup(arch, n=4, l=16)
+            newp, rep = compress_model(
+                params, cfg, calib,
+                CompressConfig(ratio=0.6, refine_epochs=1, rank_multiple=1))
+            assert np.isfinite(eval_loss(newp, cfg, calib)), arch
+            if arch == "zamba2-7b":
+                names = [u["name"] for u in rep["units"]]
+                assert any("shared" in n for n in names)
+                assert any(u.get("reused") for u in rep["units"])
+
+
+class TestRanks:
+    def test_standard_formula(self):
+        # App B.3 worked example: m=n=4096, k=512 -> stored 4.2M of 16.8M
+        assert R.achieved_ratio(4096, 4096, 512) == pytest.approx(0.25)
+        # NOTE: the paper's text says ρ=0.125 for this example but also says
+        # "16.8M -> 4.2M (4x)", which is ρ=0.25 — we implement the formula
+        # ρ = k(m+n)/(mn) consistently with the 4x claim.
+        k = R.rank_for_ratio(4096, 4096, 0.25, multiple=1)
+        assert k == 512
+
+    def test_remap_spans_full_rank_range(self):
+        # App B.4: remapped ratio k/min(m,n) reaches k=min(m,n) at rho=1
+        assert R.rank_for_ratio(4096, 11008, 1.0, remap=True, multiple=1) \
+            == 4096
+        assert R.rank_for_ratio(4096, 11008, 0.5, remap=True, multiple=1) \
+            == 2048
+        # standard formula caps below full rank
+        kmax = R.rank_for_ratio(4096, 11008, 1.0, multiple=1)
+        assert kmax == (4096 * 11008) // (4096 + 11008)
+
+    def test_rank_multiple_rounds_up_lane_friendly(self):
+        k = R.rank_for_ratio(4096, 4096, 0.37, multiple=8)
+        assert k % 8 == 0
+
+    def test_allocate_by_loss_respects_budget(self):
+        shapes = [(256, 256), (256, 1024), (512, 512)]
+        losses = [1.0, 10.0, 0.1]
+        ks = R.allocate_by_loss(shapes, losses, 0.5, floor_ratio=0.2)
+        stored = sum(k * (m + n) for k, (m, n) in zip(ks, shapes))
+        total = sum(m * n for m, n in shapes)
+        assert stored <= 0.55 * total
+        # lossier layers get proportionally more rank
+        assert ks[1] / (256 * 1024 / 1280) >= ks[2] / (512 * 512 / 1024)
+
+
+class TestFactorizedStruct:
+    def test_struct_matches_pipeline_output(self):
+        cfg, params, calib = setup(n=4, l=16)
+        comp, _ = compress_model(params, cfg, calib,
+                                 CompressConfig(ratio=0.6, refine=False,
+                                                rank_multiple=1))
+        struct = factorize_params(params, cfg, ratio=0.6, rank_multiple=1)
+        t1 = jax.tree.map(lambda x: x.shape, comp)
+        t2 = jax.tree.map(lambda x: x.shape, struct)
+        assert jax.tree_util.tree_structure(t1) == \
+            jax.tree_util.tree_structure(t2)
+        assert jax.tree.leaves(t1) == jax.tree.leaves(t2)

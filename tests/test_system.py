@@ -1,0 +1,105 @@
+"""End-to-end system behaviour: train → compress → serve, paper-claim order.
+
+This is the offline stand-in for the paper's LLaMA/WikiText2 evaluation
+(DESIGN.md §6): a small model TRAINED on the structured synthetic corpus is
+compressed with each method and must reproduce the paper's *relative*
+claims — data-driven objectives ≫ naive SVD, refinement helps, moderate
+ratios nearly lossless.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CompressConfig, compress_model
+from repro.data import calibration_set, make_batch_iterator
+from repro.launch import steps as S
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optim import AdamWConfig
+
+
+@pytest.fixture(scope="module")
+def trained_model():
+    """Train the smoke llama for a few hundred steps so compression has
+    real structure to preserve."""
+    cfg = get_smoke_config("llama-7b").replace(dtype="float32")
+    mesh = make_host_mesh()
+    step = jax.jit(S.make_train_step(cfg, mesh,
+                                     optimizer=AdamWConfig(lr=3e-3)))
+    state = S.init_train_state(cfg, jax.random.PRNGKey(0))
+    data = make_batch_iterator(cfg, 8, 64, seed=11)
+    first = last = None
+    for i in range(200):
+        state, metrics = step(state, next(data))
+        if i == 0:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5, f"training failed to learn: {first}->{last}"
+    return cfg, state.params
+
+
+def ppl(params, cfg, seed=99, batches=4):
+    data = make_batch_iterator(cfg, 8, 64, seed=seed)
+    tot = 0.0
+    for _ in range(batches):
+        tot += float(M.loss_fn(params, cfg, next(data))[0])
+    return float(np.exp(tot / batches))
+
+
+class TestSystem:
+    def test_compression_preserves_trained_model(self, trained_model):
+        # calibration in the paper's tokens/d_model >= 128 regime — below it
+        # noisy covariances invert the method ordering (EXPERIMENTS.md)
+        cfg, params = trained_model
+        calib = calibration_set(cfg, 64, 128)
+        base = ppl(params, cfg)
+
+        comp, _ = compress_model(
+            params, cfg, calib,
+            CompressConfig(ratio=0.8, refine_epochs=8, rank_multiple=1,
+                           microbatch=16))
+        p_aa = ppl(comp, cfg)
+
+        naive, _ = compress_model(
+            params, cfg, calib,
+            CompressConfig(ratio=0.8, objective="agnostic", refine=False,
+                           rank_multiple=1, microbatch=16))
+        p_naive = ppl(naive, cfg)
+
+        # paper ordering: AA-SVD ≪ naive SVD; moderate ratio ≈ lossless-ish
+        assert p_aa < p_naive, (p_aa, p_naive)
+        assert p_aa < base * 1.6, (p_aa, base)
+
+    def test_compressed_model_decodes(self, trained_model):
+        cfg, params = trained_model
+        calib = calibration_set(cfg, 8, 64)
+        comp, _ = compress_model(
+            params, cfg, calib,
+            CompressConfig(ratio=0.6, refine_epochs=3, rank_multiple=1))
+        from repro.launch.serve import Server
+        srv = Server(cfg, comp, max_len=48)
+        prompts = calib["tokens"][:2, :16]
+        out = srv.generate(prompts, steps=8)
+        assert out.shape == (2, 8)
+        assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size
+
+    def test_train_step_under_mesh_sharding(self):
+        """pjit path with explicit shardings on the host mesh."""
+        cfg = get_smoke_config("granite-3-8b").replace(dtype="float32")
+        mesh = make_host_mesh()
+        state_struct = jax.eval_shape(
+            lambda: S.init_train_state(cfg, jax.random.PRNGKey(0)))
+        batch = next(make_batch_iterator(cfg, 4, 32, seed=0))
+        batch_struct = jax.eval_shape(lambda: batch)
+        state_sh, batch_sh = S.train_shardings(cfg, mesh, state_struct,
+                                               batch_struct)
+        jstep = jax.jit(S.make_train_step(cfg, mesh),
+                        in_shardings=(state_sh, batch_sh),
+                        out_shardings=(state_sh, None), donate_argnums=(0,))
+        state = jax.jit(lambda k: S.init_train_state(cfg, k),
+                        out_shardings=state_sh)(jax.random.PRNGKey(0))
+        state, metrics = jstep(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
