@@ -8,12 +8,16 @@ the parameter reduction and that the compressed model serves.
 """
 
 import argparse
+import logging
 import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+
+# pipeline progress goes through logging; surface INFO here
+logging.basicConfig(level=logging.INFO, format="%(message)s")
 
 from repro.configs import ALL_ARCHS, get_smoke_config
 from repro.core import CompressConfig, compress_model

@@ -1,0 +1,14 @@
+"""AA-SVD reproduction package.
+
+Pins ``jax_threefry_partitionable`` on: the codebase assumes sharding-
+invariant random bits (newer JAX's default), so parameter init under a
+sharded jit matches the single-device reference bit-for-bit.  Older JAX
+releases default the flag off; flip it if the knob still exists.
+"""
+
+import jax
+
+try:
+    jax.config.update("jax_threefry_partitionable", True)
+except (AttributeError, ValueError):  # flag removed once always-on
+    pass

@@ -2,10 +2,12 @@
 
 - ``lowrank``     — Thm 3.2 closed-form anchored-adaptive low-rank solve
 - ``calibration`` — streaming covariance accumulation (App. B.1)
+- ``streaming``   — single-pass streaming calibration engine (tap registry)
 - ``ranks``       — ratio→rank math incl. Dobi-style remapping (App. B.3/4)
 - ``refine``      — block-level local refinement (Alg. 2 step 9, App. B.2)
 - ``pipeline``    — Algorithm 2 end-to-end block-wise driver
 """
 
-from repro.core import calibration, lowrank, pipeline, ranks, refine  # noqa: F401
+from repro.core import (  # noqa: F401
+    calibration, lowrank, pipeline, ranks, refine, streaming)
 from repro.core.pipeline import CompressConfig, compress_model  # noqa: F401

@@ -12,6 +12,12 @@ calibration size.  Expert banks accumulate per-expert covariances
 ((E, n, n)) from the routed capacity buffers — zero-padded slots contribute
 zero outer products, so no masking is needed.
 
+All three products are computed by ``kernels.ops.cov_accum`` /
+``kernels.ops.cov_accum_banked``: the fused single-pass Pallas kernel on
+TPU (every X / X' tile is loaded once and feeds up to three MXU
+contractions), the pure-jnp reference elsewhere.  No covariance matmul is
+issued directly from this module.
+
 Distributed: accumulate per-device partial covariances on data-sharded
 activations and all-reduce once per block (a single d×d psum; the jitted
 ``update`` lowers to exactly that under pjit when token dims are sharded).
@@ -19,11 +25,12 @@ activations and all-reduce once per block (a single d×d psum; the jitted
 
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 
 def init_covs(n: int, experts: int = 0) -> Dict[str, jnp.ndarray]:
@@ -44,20 +51,19 @@ def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
     the accumulator shape."""
     x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
     xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp
-    xf = x.astype(jnp.float32)
-    xpf = xp.astype(jnp.float32)
     if covs["xx"].ndim == 3:  # expert banks: (E, tokens, n)
-        upd = lambda acc, a, b: acc + jnp.einsum("etn,etm->enm", a, b)
+        xx, xxp, xpxp = ops.cov_accum_banked(x, xp)
+        count = covs["count"] + x.shape[-2]
     else:
-        xf = xf.reshape(-1, xf.shape[-1])
-        xpf = xpf.reshape(-1, xpf.shape[-1])
-        upd = lambda acc, a, b: acc + a.T @ b
+        x = x.reshape(-1, x.shape[-1])
+        xp = xp.reshape(-1, xp.shape[-1])
+        xx, xxp, xpxp = ops.cov_accum(x, xp)
+        count = covs["count"] + x.shape[0]
     return {
-        "xx": upd(covs["xx"], xf, xf),
-        "xxp": upd(covs["xxp"], xf, xpf),
-        "xpxp": upd(covs["xpxp"], xpf, xpf),
-        "count": covs["count"] + xf.shape[-2] if covs["xx"].ndim == 3
-        else covs["count"] + xf.shape[0],
+        "xx": covs["xx"] + xx,
+        "xxp": covs["xxp"] + xxp,
+        "xpxp": covs["xpxp"] + xpxp,
+        "count": count,
     }
 
 

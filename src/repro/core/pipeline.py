@@ -3,24 +3,46 @@
 The model is unrolled into *units* (one transformer/mamba block each; scanned
 stages are unstacked and restacked afterwards).  Per unit:
 
-  1. for each tap-group of linears (q/k/v share covariances, gate/up share,
-     etc. — the paper's App. B.1 amortization): accumulate {XXᵀ, XX'ᵀ, X'X'ᵀ}
-     over the calibration stream, where X comes from the ORIGINAL unit on the
-     original stream and X' from the PARTIALLY COMPRESSED unit on the shifted
-     stream; solve Thm 3.2 per linear in the group; swap the weight for its
-     (U, V) factors.  Expert banks solve per-expert (vmapped).
+  1. calibration statistics via the streaming engine (``core.streaming``):
+     every tap group of linears (q/k/v share covariances, gate/up share,
+     etc. — the paper's App. B.1 amortization) owns a ``TapAccumulator``
+     holding {XXᵀ, XX'ᵀ, X'X'ᵀ}, where X comes from the ORIGINAL unit on
+     the original stream and X' from the PARTIALLY COMPRESSED unit on the
+     shifted stream.  All accumulation routes through
+     ``kernels.ops.cov_accum`` (fused single-pass Pallas kernel on TPU, jnp
+     reference elsewhere).  Then solve Thm 3.2 per linear in the group and
+     swap the weight for its (U, V) factors.  Expert banks solve
+     per-expert (vmapped).
   2. block-level refinement (core.refine) against the original block outputs.
   3. propagate both streams: X ← L_i(X) with original weights,
      X' ← L'_i(X') with compressed weights.
 
+``CompressConfig.calib_mode`` selects the collection strategy:
+
+  * ``"sequential"`` (default) — exact seed semantics: shifted taps are
+    recomputed after each group solve, so later groups calibrate against
+    the already-compressed earlier groups.  Costs 2·G·B tapped block
+    forwards per unit (G tap groups, B microbatches).
+  * ``"fused"`` — one tapped forward per microbatch per stream; every sown
+    tap feeds its accumulator from the same pass and all groups are solved
+    jointly.  Costs 2·B tapped forwards per unit (a ~G× reduction);
+    shifted taps see the unit pre-solve.
+
+The per-unit report carries ``tapped_forwards`` so the reduction is
+observable (see ``benchmarks/calibration_size.py``).
+
 Weight-shared blocks (zamba2's shared attention) are compressed at their
 first invocation site and reused thereafter (DESIGN.md §Arch-applicability).
+
+Progress output goes through ``logging`` (logger ``repro.core.pipeline``);
+configure the root logger to redirect or silence large-model runs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -30,9 +52,12 @@ from repro.core import calibration as C
 from repro.core import lowrank as LR
 from repro.core import ranks as R
 from repro.core import refine as RF
+from repro.core import streaming as S
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models import model as M
+
+LOG = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +72,8 @@ class CompressConfig:
     whiten: str = "eigh"          # eigh | cholesky
     rank_multiple: int = 8        # TPU lane-friendly rank rounding
     microbatch: int = 8           # calibration sequences per forward
-    verbose: bool = False
+    calib_mode: str = "sequential"  # sequential (seed parity) | fused
+    verbose: bool = False         # INFO-level progress via logging
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +316,8 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     calib: {"tokens": (N, L) [, "patches", "frames"]}.
     Returns (compressed_params, report).
     """
+    if ccfg.calib_mode not in ("sequential", "fused"):
+        raise ValueError(f"unknown calib_mode {ccfg.calib_mode!r}")
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
     units = unroll_units(params, cfg)
     report: Dict[str, Any] = {"units": [], "config": dataclasses.asdict(ccfg)}
@@ -349,26 +377,25 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         fwd_taps = make_unit_apply(unit.kind, cfg, seq_len, want_taps=True)
         fwd = make_unit_apply(unit.kind, cfg, seq_len, want_taps=False)
 
-        unit_report = {"name": unit.name, "kind": unit.kind, "linears": []}
+        unit_report = {"name": unit.name, "kind": unit.kind,
+                       "calib_mode": ccfg.calib_mode, "linears": []}
 
-        # ---- stage 1: per-group covariance accumulation + closed-form solve
-        for tap, group in tap_groups(linear_specs(unit.kind, cfg)):
-            covs = None
-            is_bank = group[0][2]
-            if ccfg.objective != "agnostic":
-                for i in range(len(xs)):
-                    _, taps_o = fwd_taps(orig_p, xs[i],
-                                         None if dec_aux_o is None else dec_aux_o[i])
-                    _, taps_c = fwd_taps(cur_p, xps[i],
-                                         None if dec_aux_c is None else dec_aux_c[i])
-                    a_act, b_act = taps_o[tap], taps_c[tap]
-                    if not is_bank:  # flatten (B, L, n) -> (tokens, n)
-                        a_act = a_act.reshape(-1, a_act.shape[-1])
-                        b_act = b_act.reshape(-1, b_act.shape[-1])
-                    if covs is None:
-                        experts = a_act.shape[0] if is_bank else 0
-                        covs = C.init_covs(a_act.shape[-1], experts)
-                    covs = C.update_covs(covs, a_act, b_act)
+        # ---- stage 1: streaming covariance accumulation + closed-form solve
+        groups = tap_groups(linear_specs(unit.kind, cfg))
+        engine: Optional[S.CalibrationEngine] = None
+        anchors = None  # original-stream outputs captured by the fused pass
+        if ccfg.objective != "agnostic":
+            engine = S.CalibrationEngine.for_unit(
+                groups, fwd_taps, orig_p, xs[0],
+                None if dec_aux_o is None else dec_aux_o[0])
+            if ccfg.calib_mode == "fused":
+                anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
+                                               xs, xps, dec_aux_o, dec_aux_c)
+        for tap, group in groups:
+            if engine is not None and ccfg.calib_mode == "sequential":
+                engine.collect_group(tap, fwd_taps, orig_p, cur_p, xs, xps,
+                                     dec_aux_o, dec_aux_c)
+            covs = engine.covs_for(tap) if engine is not None else None
             for path, _, is_bank in group:
                 wp = get_path(cur_p, path)
                 w = wp["w"]
@@ -381,14 +408,20 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                     {"path": path, "rank": k, "shape": list(w.shape),
                      "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2], k,
                                                remap=ccfg.remap)})
-            if ccfg.verbose:
-                print(f"  {unit.name}: group {tap} -> rank "
-                      f"{unit_report['linears'][-1]['rank']}")
+            if engine is not None:
+                engine.release(tap)  # solved: free this group's covariances
+            LOG.debug("%s: group %s -> rank %d", unit.name, tap,
+                      unit_report["linears"][-1]["rank"])
+        unit_report["tapped_forwards"] = \
+            engine.stats["tapped_forwards"] if engine is not None else 0
 
         # ---- stage 2: block-level refinement --------------------------------
-        y_anchor = [fwd(orig_p, xs[i],
-                        None if dec_aux_o is None else dec_aux_o[i]
-                        ).astype(jnp.float32) for i in range(len(xs))]
+        if anchors is not None:  # fused pass already ran the original block
+            y_anchor = [a.astype(jnp.float32) for a in anchors]
+        else:
+            y_anchor = [fwd(orig_p, xs[i],
+                            None if dec_aux_o is None else dec_aux_o[i]
+                            ).astype(jnp.float32) for i in range(len(xs))]
         if ccfg.refine:
             xp_b = [(xps[i], None if dec_aux_c is None else dec_aux_c[i])
                     for i in range(len(xps))]
@@ -416,16 +449,17 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         if unit.shared:
             shared_done[unit.kind] = {"orig": orig_p, "comp": cur_p}
         report["units"].append(unit_report)
-        if ccfg.verbose:
-            msg = f"[compress] {unit.name}"
-            if "post_refine_mse" in unit_report:
-                msg += (f" mse {unit_report['pre_refine_mse']:.3e} -> "
-                        f"{unit_report['post_refine_mse']:.3e}")
-            print(msg)
+        msg = f"[compress] {unit.name}"
+        if "post_refine_mse" in unit_report:
+            msg += (f" mse {unit_report['pre_refine_mse']:.3e} -> "
+                    f"{unit_report['post_refine_mse']:.3e}")
+        LOG.log(logging.INFO if ccfg.verbose else logging.DEBUG, "%s", msg)
 
-    # whisper: apply final encoder norm to enc streams happens inside the
-    # decoder's ctx at model level; during compression the decoder units see
-    # the normed encoder output:
+    report["calibration"] = {
+        "mode": ccfg.calib_mode,
+        "tapped_forwards": sum(u.get("tapped_forwards", 0)
+                               for u in report["units"]),
+    }
     new_params = restack_units(params, cfg, units)
     return new_params, report
 

@@ -11,12 +11,15 @@ calibration set with batch size 32 (paper defaults; all overridable).
 
 from __future__ import annotations
 
+import logging
 from typing import Callable, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.optim import adamw
+
+LOG = logging.getLogger(__name__)
 
 
 def refine_unit(apply_fn: Callable, params, xp_batches: Sequence,
@@ -68,7 +71,7 @@ def refine_unit(apply_fn: Callable, params, xp_batches: Sequence,
             ep_loss += float(loss)
         history["losses"].append(ep_loss / n_batches)
         if log_every and (epoch + 1) % log_every == 0:
-            print(f"    refine epoch {epoch + 1}/{epochs}: "
-                  f"mse {ep_loss / n_batches:.3e}")
+            LOG.info("refine epoch %d/%d: mse %.3e",
+                     epoch + 1, epochs, ep_loss / n_batches)
     history["post_refine_mse"] = mean_loss(params)
     return params, history

@@ -1,0 +1,185 @@
+"""Single-pass streaming calibration engine (App. B.1 at driver scale).
+
+Algorithm 2 needs, per unit, the covariance triple {XᵀX, XᵀX', X'ᵀX'} at
+the input of every tap group (q/k/v share a tap, gate/up share, expert
+banks route per-expert).  The seed driver recomputed the full tapped block
+forward once per *group* and per *stream* — 2·G·B tapped forwards per unit
+for G groups and B calibration microbatches — even though a single tapped
+pass materializes every sown activation at once.
+
+This module owns the streaming restructure:
+
+* ``TapAccumulator`` — covariance state for one tap (dense ``(n, n)`` or
+  expert-bank ``(E, n, n)``), updated through ``core.calibration`` which in
+  turn routes every accumulation through ``kernels.ops.cov_accum`` /
+  ``cov_accum_banked`` (fused one-pass Pallas kernel on TPU, jnp reference
+  elsewhere).  Memory per tap is 3·n² fp32 regardless of calibration size.
+* ``CalibrationEngine`` — a per-unit registry of accumulators, sized up
+  front from one shape-only evaluation (``models.layers.tap_shapes``), plus
+  the two collection strategies the driver chooses between via
+  ``CompressConfig.calib_mode``:
+
+  - ``"sequential"`` (parity default): ``collect_group`` replays both
+    streams for each tap group, so shifted taps see every previously
+    solved group — bit-for-bit the seed semantics and its 2·G·B forwards.
+  - ``"fused"`` (fast path): ``collect_fused`` issues ONE tapped forward
+    per microbatch per stream and routes every sown tap into its
+    accumulator — 2·B forwards per unit (≤ (G+1)·B for any G ≥ 1).  All
+    groups are then solved from the jointly collected statistics; shifted
+    taps for later groups see the unit pre-solve (the documented
+    approximation, in exchange for a ~G× cut in calibration forwards).
+
+The engine counts every tapped forward it issues (``stats``); the driver
+surfaces the counts in its per-unit report so benchmarks and tests can
+assert the reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as C
+from repro.models import layers as L
+
+# (param_path, tap_name, is_expert_bank) — see pipeline.linear_specs
+Spec = Tuple[str, str, bool]
+Groups = Sequence[Tuple[str, Sequence[Spec]]]
+
+
+@dataclasses.dataclass
+class TapAccumulator:
+    """Streaming covariance state for one tap.
+
+    Dense taps arrive as (B, L, n) activations, expert-bank taps as
+    (E, C, n) routed capacity buffers (zero-padded slots add zero outer
+    products); ``calibration.update_covs`` dispatches on the accumulator
+    shape, flattening dense inputs to token rows itself.
+    """
+
+    tap: str
+    is_bank: bool
+    covs: Dict[str, jnp.ndarray]
+
+    def update(self, a_act: jnp.ndarray, b_act: jnp.ndarray) -> None:
+        self.covs = C.update_covs(self.covs, a_act, b_act)
+
+
+class CalibrationEngine:
+    """Per-unit registry of tap accumulators + stream collection.
+
+    ``fwd_taps(params, x, aux) -> (y, {tap: activation})`` is the unit's
+    tapped apply fn; ``aux`` is the per-microbatch auxiliary input (the
+    encoder stream for whisper decoders, else None).
+    """
+
+    def __init__(self, groups: Groups,
+                 shapes: Dict[str, jax.ShapeDtypeStruct]):
+        self.groups = list(groups)
+        # tap -> (is_bank, n, experts); accumulators materialize lazily so
+        # sequential mode holds one group's 3·n² state at a time (seed peak
+        # memory) while fused mode grows to all taps as they stream in
+        self._spec: Dict[str, Tuple[bool, int, int]] = {}
+        for tap, group in self.groups:
+            is_bank = group[0][2]
+            sd = shapes[tap]
+            self._spec[tap] = (is_bank, sd.shape[-1],
+                               sd.shape[0] if is_bank else 0)
+        self.accumulators: Dict[str, TapAccumulator] = {}
+        self._released: Set[str] = set()
+        self.stats: Dict[str, int] = {"tapped_forwards": 0, "tap_updates": 0}
+
+    @classmethod
+    def for_unit(cls, groups: Groups, fwd_taps: Callable, params,
+                 x0, aux0) -> "CalibrationEngine":
+        """Build the registry from one shape-only tap discovery (no data
+        touched): every accumulator's final size is known up front."""
+        shapes = L.tap_shapes(fwd_taps, params, x0, aux0)
+        return cls(groups, shapes)
+
+    def _acc(self, tap: str) -> TapAccumulator:
+        if tap in self._released:
+            # a released tap must never resurrect as zeroed state: a spec
+            # table reusing one tap name across non-adjacent groups would
+            # otherwise solve the later group from all-zero covariances
+            raise RuntimeError(f"tap {tap!r} already solved and released")
+        acc = self.accumulators.get(tap)
+        if acc is None:
+            is_bank, n, experts = self._spec[tap]
+            acc = TapAccumulator(tap, is_bank, C.init_covs(n, experts))
+            self.accumulators[tap] = acc
+        return acc
+
+    # -- accumulation -------------------------------------------------------
+
+    def consume(self, taps_orig: Dict[str, jnp.ndarray],
+                taps_shift: Dict[str, jnp.ndarray], *,
+                only: Optional[Set[str]] = None) -> None:
+        """Route one microbatch of sown taps into the accumulators.
+
+        ``only`` restricts the update to a subset of taps (the sequential
+        parity path); by default every registered tap accumulates.
+        """
+        for tap in self._spec:
+            if only is not None and tap not in only:
+                continue
+            self._acc(tap).update(taps_orig[tap], taps_shift[tap])
+            self.stats["tap_updates"] += 1
+
+    def _tapped(self, fwd_taps, p, x, aux):
+        self.stats["tapped_forwards"] += 1
+        return fwd_taps(p, x, aux)  # (y, {tap: activation})
+
+    def _collect(self, fwd_taps: Callable, orig_p, cur_p,
+                 xs: Sequence, xps: Sequence,
+                 aux_o: Optional[Sequence], aux_c: Optional[Sequence], *,
+                 only: Optional[Set[str]] = None,
+                 keep_orig_outputs: bool = False):
+        """One stream sweep: a tapped forward per microbatch per stream,
+        routed into the accumulators (optionally ``only`` a subset)."""
+        ys = [] if keep_orig_outputs else None
+        for i in range(len(xs)):
+            y, taps_o = self._tapped(fwd_taps, orig_p, xs[i],
+                                     None if aux_o is None else aux_o[i])
+            _, taps_c = self._tapped(fwd_taps, cur_p, xps[i],
+                                     None if aux_c is None else aux_c[i])
+            if ys is not None:
+                ys.append(y)
+            self.consume(taps_o, taps_c, only=only)
+        return ys
+
+    def collect_fused(self, fwd_taps: Callable, orig_p, cur_p,
+                      xs: Sequence, xps: Sequence,
+                      aux_o: Optional[Sequence],
+                      aux_c: Optional[Sequence]) -> Sequence:
+        """Fast path: every sown tap feeds its accumulator from the same
+        pass.  Returns the original-stream unit outputs so the driver can
+        reuse them as the refinement anchor instead of re-running the
+        block (the tapped and untapped applies compute the same y)."""
+        return self._collect(fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
+                             keep_orig_outputs=True)
+
+    def collect_group(self, tap: str, fwd_taps: Callable, orig_p, cur_p,
+                      xs: Sequence, xps: Sequence,
+                      aux_o: Optional[Sequence],
+                      aux_c: Optional[Sequence]) -> None:
+        """Parity path: replay both streams for ONE tap group, so shifted
+        taps reflect every previously solved group (seed semantics)."""
+        self._collect(fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
+                      only={tap})
+
+    # -- access -------------------------------------------------------------
+
+    def covs_for(self, tap: str) -> Dict[str, jnp.ndarray]:
+        return self._acc(tap).covs
+
+    def release(self, tap: str) -> None:
+        """Drop a tap's accumulator once its group is solved — frees the
+        3·n² (or 3·E·n²) fp32 state so per-unit peak memory tracks the
+        largest single group, not the sum over groups.  Further access to
+        the tap raises (no silent zeroed resurrection)."""
+        self.accumulators.pop(tap, None)
+        self._released.add(tap)

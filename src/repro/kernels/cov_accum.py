@@ -13,6 +13,12 @@ and feeds up to three MXU contractions with fp32 accumulation in VMEM.
 
 Output blocks are revisited across the sequential T dimension and
 accumulated in-place (initialized at t == 0).
+
+Call sites go through ``kernels.ops.cov_accum`` (dense (T, n) taps) and
+``kernels.ops.cov_accum_banked`` (expert banks: this kernel vmapped over
+the leading (E, C, n) expert axis), which handle backend dispatch and
+block-multiple padding; ``core.calibration.update_covs`` routes every
+calibration accumulation through those wrappers.
 """
 
 from __future__ import annotations
@@ -23,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
 
 
 def _kernel(x_i, x_j, xp_i, xp_j, xx, xxp, xpxp):
@@ -78,6 +86,6 @@ def cov_accum(x, xp, *, bi: int = 256, bt: int = 512,
         ],
         out_shape=[out, out, out],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, x, xp, xp)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(n_steps: int, x_ref, v_ref, u_ref, y_ref, t_ref):
     j = pl.program_id(1)
@@ -78,6 +80,6 @@ def lowrank_matmul(x, v, u, *, bt: int = 256, bn: int = 512, bm: int = 512,
         out_shape=jax.ShapeDtypeStruct((t_dim, m), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, k), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(x, v, u)

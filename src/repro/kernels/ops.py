@@ -60,6 +60,22 @@ def cov_accum(x, xp, *, force_pallas: bool = False, interpret: bool = False):
     return _cov_kernel(x, xp, bi=bi, bt=512, interpret=interpret)
 
 
+def cov_accum_banked(x, xp, *, force_pallas: bool = False,
+                     interpret: bool = False):
+    """Expert-bank covariance triple: (E, C, n) x2 -> each (E, n, n) fp32.
+
+    vmaps the fused single-pass kernel over the expert axis; capacity
+    padding is exact (zero-padded slots add zero outer products)."""
+    if not (use_pallas() or force_pallas):
+        return ref.cov_accum_banked_ref(x, xp)
+    n = x.shape[-1]
+    x, _ = _pad_dim(x, 1, 512)
+    xp, _ = _pad_dim(xp, 1, 512)
+    bi = 256 if n % 256 == 0 else n
+    fn = functools.partial(_cov_kernel, bi=bi, bt=512, interpret=interpret)
+    return jax.vmap(fn)(x, xp)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     force_pallas: bool = False, interpret: bool = False):
     """q: (B, H, Lq, D); k/v: (B, KV, Lk, D)."""

@@ -21,6 +21,16 @@ def cov_accum_ref(x, xp):
     return xf.T @ xf, xf.T @ xpf, xpf.T @ xpf
 
 
+def cov_accum_banked_ref(x, xp):
+    """Per-expert covariance triple.  x, xp: (E, C, n) routed capacity
+    buffers -> (xx, xxp, xpxp) each (E, n, n) fp32.  Zero-padded capacity
+    slots contribute zero outer products."""
+    xf = x.astype(jnp.float32)
+    xpf = xp.astype(jnp.float32)
+    upd = lambda a, b: jnp.einsum("etn,etm->enm", a, b)
+    return upd(xf, xf), upd(xf, xpf), upd(xpf, xpf)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q: (B, H, Lq, D); k/v: (B, KV, Lk, D).  Dense softmax reference."""
     b, h, lq, d = q.shape

@@ -301,8 +301,10 @@ def analyze(hlo: str, *, total_devices: int = 1) -> Costs:
         head = arg_region.split(")", 1)[0]
         for name in _OPERAND_RE.findall(head):
             types.extend(comp.symtab.get(name, []))
-        # fall back: inline-typed operands
-        types.extend(_TYPE_RE.findall(head))
+        if not types:
+            # fall back: inline-typed operands (older HLO printers spell
+            # operand types on the op line; counting both would double)
+            types.extend(_TYPE_RE.findall(head))
         return types
 
     def comp_costs(name: str, top_bytes: bool) -> Costs:

@@ -59,6 +59,28 @@ def sow(name: str, x) -> None:
         _SOW_STORE["/".join(_SCOPE + [name])] = x
 
 
+def tap_shapes(fn, *args) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Discover every tap ``fn`` sows — name, shape, dtype — in ONE
+    shape-only evaluation (``jax.eval_shape``: no FLOPs, no HBM traffic).
+
+    ``fn(*args)`` may either sow into the ambient store (a plain forward)
+    or manage its own store and return ``(out, store)`` (a tapped apply fn
+    such as ``pipeline.make_unit_apply(..., want_taps=True)``); both are
+    handled.  Calibration engines use this to size their covariance
+    accumulators up front instead of initializing lazily from the first
+    data batch.
+    """
+    def wrapped(*a):
+        store: Dict[str, jnp.ndarray] = {}
+        with sowing(store):
+            out = fn(*a)
+        if (isinstance(out, tuple) and len(out) == 2
+                and isinstance(out[1], dict)):
+            return {**out[1], **store}
+        return store
+    return jax.eval_shape(wrapped, *args)
+
+
 # ---------------------------------------------------------------------------
 # linear
 

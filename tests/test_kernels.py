@@ -51,6 +51,43 @@ def test_cov_accum_sweep(t, n, dtype):
         assert rel < (2e-2 if dtype == jnp.bfloat16 else 2e-5), rel
 
 
+@pytest.mark.parametrize("t,n", [(300, 192), (130, 100), (513, 384), (96, 72)])
+def test_cov_accum_ops_unaligned_parity(t, n):
+    """ops.cov_accum pads tokens to the 512 block multiple and picks a
+    feature block that divides n; zero-row padding must be EXACT, for token
+    counts not divisible by 512 and feature dims not divisible by 256."""
+    from repro.kernels import ops
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (t, n), jnp.float32)
+    xp = x + 0.1 * jax.random.normal(k2, (t, n), jnp.float32)
+    outs = ops.cov_accum(x, xp, force_pallas=True, interpret=True)
+    wants = ref.cov_accum_ref(x, xp)
+    for o, w in zip(outs, wants):
+        assert o.shape == (n, n)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("e,c,n", [(3, 37, 100), (2, 130, 192)])
+def test_cov_accum_banked_unaligned_parity(e, c, n):
+    """Bank entry point: vmapped kernel over the expert axis, unaligned
+    capacity and feature dims, vs the einsum reference."""
+    from repro.kernels import ops
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (e, c, n), jnp.float32)
+    xp = x + 0.1 * jax.random.normal(k2, (e, c, n), jnp.float32)
+    outs = ops.cov_accum_banked(x, xp, force_pallas=True, interpret=True)
+    wants = ref.cov_accum_banked_ref(x, xp)
+    for o, w in zip(outs, wants):
+        assert o.shape == (e, n, n)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w),
+                                   rtol=2e-5, atol=2e-5)
+    # CPU fallback dispatches to the same reference
+    fb = ops.cov_accum_banked(x, xp)
+    for o, w in zip(fb, wants):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(w), rtol=1e-6)
+
+
 @pytest.mark.parametrize("b,h,kv,l,d", [
     (1, 4, 4, 128, 64),   # MHA
     (2, 4, 2, 128, 64),   # GQA
