@@ -9,6 +9,14 @@ covariances from ONE tapped pass per microbatch per stream, cutting tapped
 block forwards per unit from 2·G·B (sequential per-group replay) to 2·B.
 Both the counts (from the compression report) and the resulting perplexity
 are emitted so the speed/quality trade is visible.
+
+Hybrid claim (ISSUE 2): ``calib_mode="hybrid"`` re-collects only the
+replay groups (expert banks) sequentially on top of one fused pass —
+2·B + 2·R·B forwards.  The ``calib_forwards_hybrid`` row carries its count,
+replayed-group total, and perplexity next to the other two modes; on dense
+substrates (the default llama ctx) R = 0 and the count collapses to
+fused's, which the claim row checks as the forwards ordering
+fused ≤ hybrid ≤ sequential.
 """
 
 from __future__ import annotations
@@ -38,21 +46,29 @@ def run(ctx) -> List[str]:
                 f"{'PASS' if ok else 'FAIL'}")
     ctx["calib_curve"] = ppls
 
-    # streaming engine: tapped-forward counts + quality, fused vs sequential
+    # streaming engine: tapped-forward counts + quality per calib mode
     calib = calibration_set(cfg, 16, 128)
     counts, mode_ppl = {}, {}
-    for mode in ("sequential", "fused"):
+    for mode in ("sequential", "fused", "hybrid"):
         comp, rep = compress_model(
             params, cfg, calib,
             CompressConfig(ratio=0.6, refine=False, rank_multiple=1,
                            microbatch=16, calib_mode=mode))
         counts[mode] = rep["calibration"]["tapped_forwards"]
         mode_ppl[mode] = ppl_on(comp, cfg, evalb)
+        extra = ""
+        if mode == "hybrid":
+            extra = f",replayed={rep['calibration']['replayed_groups']}"
         rows.append(f"calib_forwards_{mode},0.0,"
-                    f"count={counts[mode]},ppl={mode_ppl[mode]:.3f}")
+                    f"count={counts[mode]},ppl={mode_ppl[mode]:.3f}{extra}")
     ok = counts["fused"] < counts["sequential"]
     rows.append(f"claim_I1_fused_cuts_tapped_forwards,0.0,"
                 f"{'PASS' if ok else 'FAIL'} "
                 f"({counts['sequential']} -> {counts['fused']})")
+    ok = counts["fused"] <= counts["hybrid"] <= counts["sequential"]
+    rows.append(f"claim_I2_hybrid_forwards_between,0.0,"
+                f"{'PASS' if ok else 'FAIL'} "
+                f"({counts['fused']} <= {counts['hybrid']} <= "
+                f"{counts['sequential']})")
     ctx["calib_forwards"] = counts
     return rows

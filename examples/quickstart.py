@@ -31,10 +31,19 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ALL_ARCHS, default="llama-7b")
     ap.add_argument("--ratio", type=float, default=0.6)
+    ap.add_argument("--calib-mode", default="auto",
+                    choices=["sequential", "fused", "hybrid", "auto"],
+                    help="collection strategy; auto picks hybrid for MoE "
+                         "archs and fused otherwise")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    mode = args.calib_mode
+    if mode == "auto":
+        is_moe = cfg.moe is not None and cfg.moe.num_experts
+        mode = "hybrid" if is_moe else "fused"
 
     # 1. calibration set (the paper uses 256×2048; smoke scale here)
     calib = calibration_set(cfg, n=16, seq_len=64)
@@ -43,8 +52,10 @@ def main():
     compressed, report = compress_model(
         params, cfg, calib,
         CompressConfig(ratio=args.ratio, objective="anchored",
-                       refine=True, refine_epochs=6, verbose=True))
+                       refine=True, refine_epochs=6, calib_mode=mode,
+                       verbose=True))
     print(compress_ratio_report(params, compressed))
+    print("calibration:", report["calibration"])
 
     # 3. the compressed model is a drop-in for serving
     server = Server(cfg, compressed, max_len=64)

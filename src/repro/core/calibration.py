@@ -51,20 +51,16 @@ def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
     the accumulator shape."""
     x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
     xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp
+    acc = (covs["xx"], covs["xxp"], covs["xpxp"])
     if covs["xx"].ndim == 3:  # expert banks: (E, tokens, n)
-        xx, xxp, xpxp = ops.cov_accum_banked(x, xp)
+        xx, xxp, xpxp = ops.cov_accum_banked(x, xp, acc=acc)
         count = covs["count"] + x.shape[-2]
     else:
         x = x.reshape(-1, x.shape[-1])
         xp = xp.reshape(-1, xp.shape[-1])
-        xx, xxp, xpxp = ops.cov_accum(x, xp)
+        xx, xxp, xpxp = ops.cov_accum(x, xp, acc=acc)
         count = covs["count"] + x.shape[0]
-    return {
-        "xx": covs["xx"] + xx,
-        "xxp": covs["xxp"] + xxp,
-        "xpxp": covs["xpxp"] + xpxp,
-        "count": count,
-    }
+    return {"xx": xx, "xxp": xxp, "xpxp": xpxp, "count": count}
 
 
 def objective_covs(covs: Dict[str, jnp.ndarray], objective: str):

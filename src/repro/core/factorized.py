@@ -46,10 +46,10 @@ def factorize_params(params, cfg, *, ratio: Optional[float] = None,
             for ki, kind in enumerate(st.kinds):
                 if kind in B.SHARED_KINDS:
                     continue
-                for path, _, _ in linear_specs(kind, cfg):
-                    leaf = get_path(sp[ki], path)
+                for spec in linear_specs(kind, cfg):
+                    leaf = get_path(sp[ki], spec.path)
                     if "w" in leaf:
-                        set_path(sp[ki], path,
+                        set_path(sp[ki], spec.path,
                                  _factorize_leaf(leaf, ratio, remap,
                                                  rank_multiple))
 
@@ -58,9 +58,10 @@ def factorize_params(params, cfg, *, ratio: Optional[float] = None,
         do_stages(B.encoder_stages(cfg), params["encoder"]["stages"])
     if "shared" in params:
         for kind, p in params["shared"].items():
-            for path, _, _ in linear_specs(kind, cfg):
-                leaf = get_path(p, path)
+            for spec in linear_specs(kind, cfg):
+                leaf = get_path(p, spec.path)
                 if "w" in leaf:
-                    set_path(p, path,
-                             _factorize_leaf(leaf, ratio, remap, rank_multiple))
+                    set_path(p, spec.path,
+                             _factorize_leaf(leaf, ratio, remap,
+                                             rank_multiple))
     return params

@@ -17,7 +17,8 @@ stages are unstacked and restacked afterwards).  Per unit:
   3. propagate both streams: X ← L_i(X) with original weights,
      X' ← L'_i(X') with compressed weights.
 
-``CompressConfig.calib_mode`` selects the collection strategy:
+``CompressConfig.calib_mode`` selects the collection strategy (three-mode
+semantics):
 
   * ``"sequential"`` (default) — exact seed semantics: shifted taps are
     recomputed after each group solve, so later groups calibrate against
@@ -27,9 +28,29 @@ stages are unstacked and restacked afterwards).  Per unit:
     tap feeds its accumulator from the same pass and all groups are solved
     jointly.  Costs 2·B tapped forwards per unit (a ~G× reduction);
     shifted taps see the unit pre-solve.
+  * ``"hybrid"`` — the MoE-aware middle ground: one fused pass per
+    microbatch collects every NON-replay group's covariances plus the
+    original-stream anchors, then each *replay* group — expert banks, any
+    spec flagged ``replay=True`` in ``linear_specs``, and any tap listed
+    in ``CompressConfig.replay_taps`` — is re-collected sequentially at
+    its turn in the solve order, exactly as ``"sequential"`` would (the
+    replay sees every previously solved group).  Costs 2·B + 2·R·B tapped
+    forwards per unit for R replay groups, recovering sequential-quality
+    shifted statistics where the pre-solve approximation bites hardest
+    (accumulated error concentrates in the expert banks) while dense
+    groups keep the fused discount.
 
-The per-unit report carries ``tapped_forwards`` so the reduction is
-observable (see ``benchmarks/calibration_size.py``).
+Collection dispatch is orthogonal to the mode: ``scan_collect`` batches
+the per-microbatch accumulator updates into one jitted
+``lax.scan``-over-microbatches sweep per stream collection (donated
+accumulator carry; see ``core.streaming``).  It defaults to on for
+fused/hybrid and off for sequential, whose contract is bit-for-bit seed
+parity (the scan sweep matches the loop to fp32 tolerance, not bitwise).
+
+The per-unit report carries ``tapped_forwards`` and ``replayed_groups`` so
+the reduction is observable (see ``benchmarks/calibration_size.py``);
+shared-site (reused) units report ``tapped_forwards: 0`` with their
+``kind``/``calib_mode`` so downstream consumers never special-case them.
 
 Weight-shared blocks (zamba2's shared attention) are compressed at their
 first invocation site and reused thereafter (DESIGN.md §Arch-applicability).
@@ -43,7 +64,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -72,58 +94,79 @@ class CompressConfig:
     whiten: str = "eigh"          # eigh | cholesky
     rank_multiple: int = 8        # TPU lane-friendly rank rounding
     microbatch: int = 8           # calibration sequences per forward
-    calib_mode: str = "sequential"  # sequential (seed parity) | fused
+    calib_mode: str = "sequential"  # sequential (seed parity) | fused | hybrid
+    replay_taps: Tuple[str, ...] = ()  # extra taps replayed in hybrid mode
+    scan_collect: Optional[bool] = None  # scan-batched collection sweeps;
+    #   None = auto (on for fused/hybrid, off for sequential seed parity)
+    debug_covs: bool = False      # snapshot per-tap covariances in the report
     verbose: bool = False         # INFO-level progress via logging
 
 
 # ---------------------------------------------------------------------------
-# linear-spec tables: (param_path, tap_name, is_expert_bank)
+# linear-spec tables
 
 
-def linear_specs(kind: str, cfg) -> List[Tuple[str, str, bool]]:
+class LinearSpec(NamedTuple):
+    """One compressible linear: where its weight lives, which activation
+    tap feeds its covariances, and how hybrid calibration treats it.
+
+    ``replay=True`` marks specs whose tap group must be re-collected
+    sequentially in ``calib_mode="hybrid"`` (expert banks by default:
+    routed capacity buffers amplify the fused pre-solve approximation).
+    Indexing stays tuple-compatible with the seed's (path, tap, bank)
+    triples."""
+
+    path: str
+    tap: str
+    bank: bool = False
+    replay: bool = False
+
+
+def linear_specs(kind: str, cfg) -> List[LinearSpec]:
+    S = LinearSpec
     if kind == "mamba1":
-        return [("mixer.in_proj", "mixer/in_proj_in", False),
-                ("mixer.x_proj", "mixer/x_proj_in", False),
-                ("mixer.dt_proj", "mixer/dt_proj_in", False),
-                ("mixer.out_proj", "mixer/out_proj_in", False)]
+        return [S("mixer.in_proj", "mixer/in_proj_in"),
+                S("mixer.x_proj", "mixer/x_proj_in"),
+                S("mixer.dt_proj", "mixer/dt_proj_in"),
+                S("mixer.out_proj", "mixer/out_proj_in")]
     if kind == "mamba2":
-        return [("mixer.in_proj", "mixer/in_proj_in", False),
-                ("mixer.out_proj", "mixer/out_proj_in", False)]
+        return [S("mixer.in_proj", "mixer/in_proj_in"),
+                S("mixer.out_proj", "mixer/out_proj_in")]
 
-    specs: List[Tuple[str, str, bool]] = []
+    specs: List[LinearSpec] = []
     if kind.startswith("mla"):
-        specs += [("attn.wq", "attn/qkv_in", False),
-                  ("attn.wkv_a", "attn/qkv_in", False),
-                  ("attn.wk_b", "attn/kvb_in", False),
-                  ("attn.wv_b", "attn/kvb_in", False),
-                  ("attn.wo", "attn/o_in", False)]
+        specs += [S("attn.wq", "attn/qkv_in"),
+                  S("attn.wkv_a", "attn/qkv_in"),
+                  S("attn.wk_b", "attn/kvb_in"),
+                  S("attn.wv_b", "attn/kvb_in"),
+                  S("attn.wo", "attn/o_in")]
     else:
-        specs += [("attn.wq", "attn/qkv_in", False),
-                  ("attn.wk", "attn/qkv_in", False),
-                  ("attn.wv", "attn/qkv_in", False),
-                  ("attn.wo", "attn/o_in", False)]
+        specs += [S("attn.wq", "attn/qkv_in"),
+                  S("attn.wk", "attn/qkv_in"),
+                  S("attn.wv", "attn/qkv_in"),
+                  S("attn.wo", "attn/o_in")]
     if kind == "dec_attn":
-        specs += [("xattn.wq", "xattn/q_in", False),
-                  ("xattn.wk", "xattn/kv_in", False),
-                  ("xattn.wv", "xattn/kv_in", False),
-                  ("xattn.wo", "xattn/o_in", False)]
+        specs += [S("xattn.wq", "xattn/q_in"),
+                  S("xattn.wk", "xattn/kv_in"),
+                  S("xattn.wv", "xattn/kv_in"),
+                  S("xattn.wo", "xattn/o_in")]
     if kind.endswith("_moe"):
-        specs += [("ffn.experts.gate", "ffn/experts_in", True),
-                  ("ffn.experts.up", "ffn/experts_in", True),
-                  ("ffn.experts.down", "ffn/experts_down_in", True)]
+        specs += [S("ffn.experts.gate", "ffn/experts_in", True, True),
+                  S("ffn.experts.up", "ffn/experts_in", True, True),
+                  S("ffn.experts.down", "ffn/experts_down_in", True, True)]
         if cfg.moe.num_shared_experts:
-            specs += [("ffn.shared.gate", "ffn/shared/in", False),
-                      ("ffn.shared.up", "ffn/shared/in", False),
-                      ("ffn.shared.down", "ffn/shared/down_in", False)]
+            specs += [S("ffn.shared.gate", "ffn/shared/in"),
+                      S("ffn.shared.up", "ffn/shared/in"),
+                      S("ffn.shared.down", "ffn/shared/down_in")]
     else:
         if cfg.act_fn == "silu":
-            specs += [("ffn.gate", "ffn/in", False)]
-        specs += [("ffn.up", "ffn/in", False),
-                  ("ffn.down", "ffn/down_in", False)]
+            specs += [S("ffn.gate", "ffn/in")]
+        specs += [S("ffn.up", "ffn/in"),
+                  S("ffn.down", "ffn/down_in")]
     return specs
 
 
-def tap_groups(specs) -> List[Tuple[str, List[Tuple[str, str, bool]]]]:
+def tap_groups(specs) -> List[Tuple[str, List[LinearSpec]]]:
     """Group consecutive specs sharing a tap (shared covariances)."""
     groups: List[Tuple[str, List]] = []
     for spec in specs:
@@ -132,6 +175,18 @@ def tap_groups(specs) -> List[Tuple[str, List[Tuple[str, str, bool]]]]:
         else:
             groups.append((spec[1], [spec]))
     return groups
+
+
+def replay_taps_for(groups, ccfg: "CompressConfig") -> Set[str]:
+    """Taps whose groups are re-collected sequentially in hybrid mode:
+    expert banks, specs flagged ``replay=True``, plus any extra tap names
+    from ``CompressConfig.replay_taps``."""
+    out: Set[str] = set()
+    for tap, group in groups:
+        if tap in ccfg.replay_taps or any(s.bank or s.replay
+                                          for s in group):
+            out.add(tap)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -248,7 +303,14 @@ def restack_units(params, cfg, units: List[Unit]):
 # unit forward (jitted, with optional taps)
 
 
+@functools.lru_cache(maxsize=64)
 def make_unit_apply(kind: str, cfg, seq_len: int, want_taps: bool):
+    """One jitted (tapped or plain) sub-block apply per (kind, cfg,
+    seq_len).  Memoized so every same-kind unit shares one jit wrapper —
+    its trace cache is keyed on param structure, so unit i+1's forwards
+    (and the scanned collection sweeps built on top, see
+    ``streaming._sweep_fn``) reuse unit i's compilations instead of
+    retracing the identical computation per unit."""
     positions = jnp.arange(seq_len)
 
     def fn(p, x, enc_out):
@@ -316,8 +378,13 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     calib: {"tokens": (N, L) [, "patches", "frames"]}.
     Returns (compressed_params, report).
     """
-    if ccfg.calib_mode not in ("sequential", "fused"):
+    if ccfg.calib_mode not in ("sequential", "fused", "hybrid"):
         raise ValueError(f"unknown calib_mode {ccfg.calib_mode!r}")
+    # scan-batched collection defaults on for fused/hybrid; sequential's
+    # contract is bit-for-bit seed parity, which the loop path guarantees
+    scan = ccfg.scan_collect
+    if scan is None:
+        scan = ccfg.calib_mode != "sequential"
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
     units = unroll_units(params, cfg)
     report: Dict[str, Any] = {"units": [], "config": dataclasses.asdict(ccfg)}
@@ -360,7 +427,10 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         dec_aux_c = enc_comp if (section == "dec" and cfg.family == "encdec") else None
 
         if unit.shared and unit.params is None:
-            # later invocation site of a weight-shared block: reuse
+            # later invocation site of a weight-shared block: reuse.  The
+            # entry carries the same accounting keys as a compressed unit
+            # (zero tapped forwards) so report["calibration"] totals and
+            # benchmark rows never special-case reused blocks.
             comp_p = shared_done[unit.kind]["comp"]
             orig_p = shared_done[unit.kind]["orig"]
             fwd = make_unit_apply(unit.kind, cfg, seq_len, want_taps=False)
@@ -369,7 +439,10 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                             None if dec_aux_o is None else dec_aux_o[i])
                 xps[i] = fwd(comp_p, xps[i],
                              None if dec_aux_c is None else dec_aux_c[i])
-            report["units"].append({"name": unit.name, "reused": True})
+            report["units"].append({"name": unit.name, "kind": unit.kind,
+                                    "calib_mode": ccfg.calib_mode,
+                                    "reused": True, "tapped_forwards": 0,
+                                    "replayed_groups": 0})
             continue
 
         orig_p = _clone(unit.params)
@@ -382,6 +455,9 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
 
         # ---- stage 1: streaming covariance accumulation + closed-form solve
         groups = tap_groups(linear_specs(unit.kind, cfg))
+        replays: Set[str] = set()
+        if ccfg.calib_mode == "hybrid":
+            replays = replay_taps_for(groups, ccfg)
         engine: Optional[S.CalibrationEngine] = None
         anchors = None  # original-stream outputs captured by the fused pass
         if ccfg.objective != "agnostic":
@@ -390,22 +466,38 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                 None if dec_aux_o is None else dec_aux_o[0])
             if ccfg.calib_mode == "fused":
                 anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
-                                               xs, xps, dec_aux_o, dec_aux_c)
+                                               xs, xps, dec_aux_o, dec_aux_c,
+                                               scan=scan)
+            elif ccfg.calib_mode == "hybrid":
+                # one fused pass for every non-replay group + the anchors;
+                # replay groups collect at their solve turn below
+                anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
+                                               xs, xps, dec_aux_o, dec_aux_c,
+                                               skip=replays, scan=scan)
+        replayed = []
         for tap, group in groups:
-            if engine is not None and ccfg.calib_mode == "sequential":
+            if engine is not None and (ccfg.calib_mode == "sequential"
+                                       or tap in replays):
+                # sequential semantics: both streams replayed for this
+                # group, so its shifted taps see every solved group so far
                 engine.collect_group(tap, fwd_taps, orig_p, cur_p, xs, xps,
-                                     dec_aux_o, dec_aux_c)
+                                     dec_aux_o, dec_aux_c, scan=scan)
+                if tap in replays:
+                    replayed.append(tap)
             covs = engine.covs_for(tap) if engine is not None else None
-            for path, _, is_bank in group:
-                wp = get_path(cur_p, path)
+            if ccfg.debug_covs and covs is not None:
+                unit_report.setdefault("covs", {})[tap] = \
+                    jax.tree.map(lambda a: jax.device_get(a), covs)
+            for spec in group:
+                wp = get_path(cur_p, spec.path)
                 w = wp["w"]
                 k = _weight_rank(w, ccfg)
                 factors = _solve_weight(w, covs, k, ccfg)
                 new_p = {kk: vv for kk, vv in wp.items() if kk != "w"}
                 new_p.update(factors)
-                set_path(cur_p, path, new_p)
+                set_path(cur_p, spec.path, new_p)
                 unit_report["linears"].append(
-                    {"path": path, "rank": k, "shape": list(w.shape),
+                    {"path": spec.path, "rank": k, "shape": list(w.shape),
                      "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2], k,
                                                remap=ccfg.remap)})
             if engine is not None:
@@ -414,6 +506,8 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                       unit_report["linears"][-1]["rank"])
         unit_report["tapped_forwards"] = \
             engine.stats["tapped_forwards"] if engine is not None else 0
+        unit_report["replayed_groups"] = len(replayed)
+        unit_report["replay_taps"] = replayed
 
         # ---- stage 2: block-level refinement --------------------------------
         if anchors is not None:  # fused pass already ran the original block
@@ -457,7 +551,9 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
 
     report["calibration"] = {
         "mode": ccfg.calib_mode,
-        "tapped_forwards": sum(u.get("tapped_forwards", 0)
+        "tapped_forwards": sum(u["tapped_forwards"]
+                               for u in report["units"]),
+        "replayed_groups": sum(u.get("replayed_groups", 0)
                                for u in report["units"]),
     }
     new_params = restack_units(params, cfg, units)

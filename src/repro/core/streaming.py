@@ -16,7 +16,7 @@ This module owns the streaming restructure:
   elsewhere).  Memory per tap is 3·n² fp32 regardless of calibration size.
 * ``CalibrationEngine`` — a per-unit registry of accumulators, sized up
   front from one shape-only evaluation (``models.layers.tap_shapes``), plus
-  the two collection strategies the driver chooses between via
+  the collection strategies the driver composes into
   ``CompressConfig.calib_mode``:
 
   - ``"sequential"`` (parity default): ``collect_group`` replays both
@@ -28,6 +28,24 @@ This module owns the streaming restructure:
     groups are then solved from the jointly collected statistics; shifted
     taps for later groups see the unit pre-solve (the documented
     approximation, in exchange for a ~G× cut in calibration forwards).
+  - ``"hybrid"`` (the driver's MoE-aware policy, built from both
+    primitives): ``collect_fused(..., skip=replay_taps)`` collects every
+    NON-replay group plus the original-stream anchors in one pass, then
+    the driver calls ``collect_group`` for each replay group (expert
+    banks, or anything flagged ``replay=True`` in the spec table) at its
+    turn in the solve order — those groups see exactly the sequential
+    shifted statistics at 2·B + 2·R·B forwards for R replay groups.
+
+Collection dispatch: every ``collect_*`` call takes ``scan=True`` to batch
+the per-microbatch accumulator updates into ONE jitted
+``lax.scan``-over-microbatches sweep (accumulators are the scan carry,
+donated on accelerator backends so XLA updates them in place) instead of a
+Python loop of 2·B tapped-forward dispatches + G·B accumulator dispatches.
+The loop path remains the bit-for-bit parity reference; the scan path
+matches it to fp32 tolerance (same GEMMs, different fusion) and is the
+default for fused/hybrid collection.  Microbatches with a ragged tail
+(calibration size not divisible by the microbatch) scan the uniform prefix
+and fall back to the loop for the remainder.
 
 The engine counts every tapped forward it issues (``stats``); the driver
 surfaces the counts in its per-unit report so benchmarks and tests can
@@ -37,7 +55,8 @@ assert the reduction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Set, Tuple
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +64,36 @@ import jax.numpy as jnp
 from repro.core import calibration as C
 from repro.models import layers as L
 
-# (param_path, tap_name, is_expert_bank) — see pipeline.linear_specs
+# (param_path, tap_name, is_expert_bank[, replay]) — see
+# pipeline.LinearSpec / pipeline.linear_specs
 Spec = Tuple[str, str, bool]
 Groups = Sequence[Tuple[str, Sequence[Spec]]]
+
+
+@functools.lru_cache(maxsize=64)
+def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
+              keep_orig_outputs: bool):
+    """The jitted scan-over-microbatches collection sweep, memoized per
+    (tapped apply fn, tap subset, aux/anchor shape).  ``fwd_taps`` itself
+    is memoized per (kind, cfg, seq_len) — see ``pipeline.make_unit_apply``
+    — so every same-kind unit reuses one wrapper and its trace cache
+    instead of recompiling the identical double-forward per sweep."""
+    def sweep(covs, orig_p, cur_p, batch):
+        def step(carry, mb):
+            if have_aux:
+                x, xp, ao, ac = mb
+            else:
+                (x, xp), ao, ac = mb, None, None
+            y, taps_o = fwd_taps(orig_p, x, ao)
+            _, taps_c = fwd_taps(cur_p, xp, ac)
+            new = {t: C.update_covs(carry[t], taps_o[t], taps_c[t])
+                   for t in taps}
+            return new, (y if keep_orig_outputs else jnp.zeros(()))
+        return jax.lax.scan(step, covs, batch)
+
+    # donate the accumulator carry where the backend can alias it in place
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(sweep, donate_argnums=donate)
 
 
 @dataclasses.dataclass
@@ -90,6 +136,10 @@ class CalibrationEngine:
                                sd.shape[0] if is_bank else 0)
         self.accumulators: Dict[str, TapAccumulator] = {}
         self._released: Set[str] = set()
+        # stacked microbatch streams, shared across this unit's scan sweeps
+        # (hybrid runs 1 + R sweeps over the SAME streams — the driver only
+        # mutates them at stream propagation, after stage 1 is done)
+        self._stack_cache: Dict[Tuple[str, int], jnp.ndarray] = {}
         self.stats: Dict[str, int] = {"tapped_forwards": 0, "tap_updates": 0}
 
     @classmethod
@@ -137,9 +187,28 @@ class CalibrationEngine:
                  xs: Sequence, xps: Sequence,
                  aux_o: Optional[Sequence], aux_c: Optional[Sequence], *,
                  only: Optional[Set[str]] = None,
-                 keep_orig_outputs: bool = False):
-        """One stream sweep: a tapped forward per microbatch per stream,
-        routed into the accumulators (optionally ``only`` a subset)."""
+                 keep_orig_outputs: bool = False,
+                 scan: bool = False):
+        """One stream sweep over all microbatches, routed into the
+        accumulators (optionally ``only`` a subset of taps).
+
+        ``scan=False``: a Python loop — one tapped forward per microbatch
+        per stream plus per-tap accumulator dispatches (the bit-for-bit
+        parity reference).  ``scan=True``: one jitted ``lax.scan`` over the
+        uniform-shape microbatch prefix with the accumulators as donated
+        carry (single dispatch per sweep); any ragged tail microbatches
+        fall back to the loop.
+        """
+        if not scan:
+            return self._collect_loop(fwd_taps, orig_p, cur_p, xs, xps,
+                                      aux_o, aux_c, only=only,
+                                      keep_orig_outputs=keep_orig_outputs)
+        return self._collect_scan(fwd_taps, orig_p, cur_p, xs, xps,
+                                  aux_o, aux_c, only=only,
+                                  keep_orig_outputs=keep_orig_outputs)
+
+    def _collect_loop(self, fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
+                      *, only=None, keep_orig_outputs=False):
         ys = [] if keep_orig_outputs else None
         for i in range(len(xs)):
             y, taps_o = self._tapped(fwd_taps, orig_p, xs[i],
@@ -151,25 +220,84 @@ class CalibrationEngine:
             self.consume(taps_o, taps_c, only=only)
         return ys
 
+    def _stacked(self, role: str, seq: Sequence, n: int) -> jnp.ndarray:
+        """Stack one stream's uniform microbatch prefix onto a scan axis,
+        cached per role — hybrid's replay sweeps reuse the fused pass's
+        stack instead of re-copying the whole calibration stream."""
+        key = (role, n)
+        hit = self._stack_cache.get(key)
+        if hit is None:
+            hit = jnp.stack(seq[:n])
+            self._stack_cache[key] = hit
+        return hit
+
+    def _collect_scan(self, fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
+                      *, only=None, keep_orig_outputs=False):
+        taps = [t for t in self._spec if only is None or t in only]
+        # uniform-shape prefix (the ragged tail of an uneven calibration
+        # split cannot stack into a scanned batch axis)
+        n_uni = len(xs)
+        for i in range(1, len(xs)):
+            if xs[i].shape != xs[0].shape or xps[i].shape != xps[0].shape:
+                n_uni = i
+                break
+        ys: Optional[List] = [] if keep_orig_outputs else None
+        if n_uni >= 1 and (taps or keep_orig_outputs):
+            covs0 = {t: self._acc(t).covs for t in taps}
+            have_aux = aux_o is not None
+            batches = [self._stacked("xs", xs, n_uni),
+                       self._stacked("xps", xps, n_uni)]
+            if have_aux:
+                batches += [self._stacked("aux_o", aux_o, n_uni),
+                            self._stacked("aux_c", aux_c, n_uni)]
+            sweep = _sweep_fn(fwd_taps, tuple(taps), have_aux,
+                              keep_orig_outputs)
+            covs, ys_s = sweep(covs0, orig_p, cur_p, tuple(batches))
+            for t in taps:
+                self.accumulators[t].covs = covs[t]
+            self.stats["tapped_forwards"] += 2 * n_uni
+            self.stats["tap_updates"] += len(taps) * n_uni
+            if ys is not None:
+                ys.extend(ys_s[i] for i in range(n_uni))
+        if n_uni < len(xs):  # ragged tail: per-microbatch loop
+            tail = self._collect_loop(
+                fwd_taps, orig_p, cur_p, xs[n_uni:], xps[n_uni:],
+                None if aux_o is None else aux_o[n_uni:],
+                None if aux_c is None else aux_c[n_uni:],
+                only=only, keep_orig_outputs=keep_orig_outputs)
+            if ys is not None:
+                ys.extend(tail)
+        return ys
+
     def collect_fused(self, fwd_taps: Callable, orig_p, cur_p,
                       xs: Sequence, xps: Sequence,
                       aux_o: Optional[Sequence],
-                      aux_c: Optional[Sequence]) -> Sequence:
+                      aux_c: Optional[Sequence], *,
+                      skip: Optional[Set[str]] = None,
+                      scan: bool = False) -> Sequence:
         """Fast path: every sown tap feeds its accumulator from the same
         pass.  Returns the original-stream unit outputs so the driver can
         reuse them as the refinement anchor instead of re-running the
-        block (the tapped and untapped applies compute the same y)."""
+        block (the tapped and untapped applies compute the same y).
+
+        ``skip`` excludes taps from the joint collection (hybrid mode:
+        replay groups must not mix pre-solve statistics into the
+        accumulators they later fill sequentially)."""
+        only = None
+        if skip:
+            only = {t for t in self._spec if t not in skip}
         return self._collect(fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
-                             keep_orig_outputs=True)
+                             only=only, keep_orig_outputs=True, scan=scan)
 
     def collect_group(self, tap: str, fwd_taps: Callable, orig_p, cur_p,
                       xs: Sequence, xps: Sequence,
                       aux_o: Optional[Sequence],
-                      aux_c: Optional[Sequence]) -> None:
+                      aux_c: Optional[Sequence], *,
+                      scan: bool = False) -> None:
         """Parity path: replay both streams for ONE tap group, so shifted
         taps reflect every previously solved group (seed semantics)."""
         self._collect(fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
-                      only={tap})
+                      only={tap}, scan=scan)
 
     # -- access -------------------------------------------------------------
 

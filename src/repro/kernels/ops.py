@@ -49,31 +49,49 @@ def lowrank_matmul(x, v, u, *, force_pallas: bool = False,
     return y[:t0, :m0].reshape(*lead, m0)
 
 
-def cov_accum(x, xp, *, force_pallas: bool = False, interpret: bool = False):
-    """(T, n) x2 -> (xx, xxp, xpxp) fp32.  Token padding is exact (zero rows)."""
+def _accumulate(outs, acc):
+    """Fold a covariance triple into existing fp32 accumulators.
+
+    Keeping the add here (instead of at every call site) lets XLA alias the
+    accumulator buffers in place when they are donated — the scanned
+    collection step in ``core.streaming`` carries {xx, xxp, xpxp} through a
+    ``lax.scan`` with donated carry, so each triple is updated without a
+    fresh 3·n² allocation per microbatch."""
+    if acc is None:
+        return outs
+    return tuple(a + o for a, o in zip(acc, outs))
+
+
+def cov_accum(x, xp, *, acc=None, force_pallas: bool = False,
+              interpret: bool = False):
+    """(T, n) x2 -> (xx, xxp, xpxp) fp32.  Token padding is exact (zero
+    rows).  ``acc`` optionally supplies an existing (xx, xxp, xpxp) triple
+    to accumulate into (returned as acc + products)."""
     if not (use_pallas() or force_pallas):
-        return ref.cov_accum_ref(x, xp)
+        return _accumulate(ref.cov_accum_ref(x, xp), acc)
     n = x.shape[-1]
     x, _ = _pad_dim(x.reshape(-1, n), 0, 512)
     xp, _ = _pad_dim(xp.reshape(-1, n), 0, 512)
     bi = 256 if n % 256 == 0 else n
-    return _cov_kernel(x, xp, bi=bi, bt=512, interpret=interpret)
+    return _accumulate(_cov_kernel(x, xp, bi=bi, bt=512,
+                                   interpret=interpret), acc)
 
 
-def cov_accum_banked(x, xp, *, force_pallas: bool = False,
+def cov_accum_banked(x, xp, *, acc=None, force_pallas: bool = False,
                      interpret: bool = False):
     """Expert-bank covariance triple: (E, C, n) x2 -> each (E, n, n) fp32.
 
     vmaps the fused single-pass kernel over the expert axis; capacity
-    padding is exact (zero-padded slots add zero outer products)."""
+    padding is exact (zero-padded slots add zero outer products).  ``acc``
+    optionally supplies an existing triple to accumulate into."""
     if not (use_pallas() or force_pallas):
-        return ref.cov_accum_banked_ref(x, xp)
+        return _accumulate(ref.cov_accum_banked_ref(x, xp), acc)
     n = x.shape[-1]
     x, _ = _pad_dim(x, 1, 512)
     xp, _ = _pad_dim(xp, 1, 512)
     bi = 256 if n % 256 == 0 else n
     fn = functools.partial(_cov_kernel, bi=bi, bt=512, interpret=interpret)
-    return jax.vmap(fn)(x, xp)
+    return _accumulate(jax.vmap(fn)(x, xp), acc)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

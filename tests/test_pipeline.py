@@ -119,7 +119,17 @@ class TestPipeline:
             if arch == "zamba2-7b":
                 names = [u["name"] for u in rep["units"]]
                 assert any("shared" in n for n in names)
-                assert any(u.get("reused") for u in rep["units"])
+                reused = [u for u in rep["units"] if u.get("reused")]
+                assert reused
+                # shared-site entries carry the same accounting keys as
+                # compressed units, so totals never special-case them
+                for u in reused:
+                    assert u["kind"] == "shared_attn"
+                    assert u["calib_mode"] == "sequential"
+                    assert u["tapped_forwards"] == 0
+                    assert u["replayed_groups"] == 0
+                assert rep["calibration"]["tapped_forwards"] == sum(
+                    u["tapped_forwards"] for u in rep["units"])
 
 
 class TestRanks:

@@ -1,11 +1,16 @@
 """Streaming calibration engine: forward-count bounds and seed parity.
 
-The engine's contract (ISSUE 1):
+The engine's contract (ISSUE 1, extended by ISSUE 2):
   * ``calib_mode="sequential"`` reproduces the seed per-group replay loop
     bit-for-bit (same covariances, same solves, same compressed params) at
     2·G·B tapped block forwards per unit;
   * ``calib_mode="fused"`` issues ≤ (G+1)·B tapped forwards per unit (one
-    tapped pass per microbatch per stream feeds every accumulator).
+    tapped pass per microbatch per stream feeds every accumulator);
+  * the scan-batched collection sweep (``scan=True``: one jitted
+    ``lax.scan`` over microbatches with the accumulators as carry) matches
+    the per-microbatch loop to fp32 tolerance on unaligned shapes, ragged
+    tails included (the three-mode policy itself is locked down in
+    tests/test_calib_parity.py).
 """
 
 import math
@@ -67,7 +72,7 @@ def seed_reference_compress(params, cfg, calib, ccfg):
                         experts = a_act.shape[0] if is_bank else 0
                         covs = C.init_covs(a_act.shape[-1], experts)
                     covs = C.update_covs(covs, a_act, b_act)
-            for path, _, _bank in group:
+            for path, _, _bank, *_ in group:
                 wp = P.get_path(cur_p, path)
                 w = wp["w"]
                 k = P._weight_rank(w, ccfg)
@@ -244,3 +249,117 @@ class TestEngineUnits:
         for y, x in zip(ys, xs):  # toy fwd is identity
             np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
         assert eng.stats["tapped_forwards"] == 4
+
+    def test_collect_fused_skip_excludes_taps(self):
+        """Hybrid's fused pass must not mix pre-solve statistics into the
+        accumulators its replay groups fill later."""
+        groups, fwd = self._toy_groups_and_fwd()
+        x = jax.random.normal(KEY, (1, 4, 8))
+        eng = S.CalibrationEngine.for_unit(groups, fwd, None, x, None)
+        ys = eng.collect_fused(fwd, None, None, [x], [x], None, None,
+                               skip={"bank/in"})
+        assert len(ys) == 1  # anchors still produced
+        assert set(eng.accumulators) == {"mlp/in"}
+        assert float(eng.covs_for("bank/in")["count"]) == 0.0
+
+
+class TestScanCollection:
+    """Scan-batched sweep vs the per-microbatch loop (ISSUE 2 regression):
+    same covariances to fp32 tolerance on the unaligned shapes exercised by
+    tests/test_kernels.py, same anchors, same forward accounting."""
+
+    # (tokens, features) pairs not divisible by the kernel block multiples
+    UNALIGNED = [(300, 192), (130, 100), (513, 384), (96, 72)]
+
+    def _groups_and_fwd(self):
+        groups = [("mlp/in", [("mlp.w", "mlp/in", False)]),
+                  ("bank/in", [("bank.w", "bank/in", True)])]
+
+        def fwd(p, x, aux):
+            store = {}
+            with L.sowing(store):
+                L.sow("mlp/in", x)
+                L.sow("bank/in", jnp.stack([x[0], 2.0 * x[0]]))
+            return 3.0 * x, store
+        return groups, fwd
+
+    def _engines(self, xs, xps, *, skip=None):
+        groups, fwd = self._groups_and_fwd()
+        out = {}
+        for scan in (False, True):
+            eng = S.CalibrationEngine.for_unit(groups, fwd, None, xs[0],
+                                               None)
+            ys = eng.collect_fused(fwd, None, None, xs, xps, None, None,
+                                   skip=skip, scan=scan)
+            out[scan] = (eng, ys)
+        return out
+
+    @pytest.mark.parametrize("t,n", UNALIGNED)
+    def test_scan_matches_loop_unaligned(self, t, n):
+        k1, k2 = jax.random.split(KEY)
+        xs = [jax.random.normal(jax.random.fold_in(k1, i), (1, t, n))
+              for i in range(3)]
+        xps = [x + 0.1 * jax.random.normal(jax.random.fold_in(k2, i),
+                                           (1, t, n))
+               for i, x in enumerate(xs)]
+        out = self._engines(xs, xps)
+        eng_loop, ys_loop = out[False]
+        eng_scan, ys_scan = out[True]
+        assert eng_scan.stats == eng_loop.stats  # 2·B forwards, G·B updates
+        for tap in ("mlp/in", "bank/in"):
+            cl, cs = eng_loop.covs_for(tap), eng_scan.covs_for(tap)
+            for key in ("xx", "xxp", "xpxp"):
+                np.testing.assert_allclose(
+                    np.asarray(cs[key]), np.asarray(cl[key]),
+                    rtol=2e-5, atol=2e-5, err_msg=f"{tap}/{key} t={t} n={n}")
+            assert float(cs["count"]) == float(cl["count"])
+        for ya, yb in zip(ys_scan, ys_loop):
+            np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                                       rtol=1e-6)
+
+    def test_scan_handles_ragged_tail(self):
+        """Calibration size not divisible by the microbatch: the scan path
+        sweeps the uniform prefix and loops the ragged remainder."""
+        t, n = 130, 100
+        k1, k2 = jax.random.split(KEY)
+        shapes = [(2, t, n), (2, t, n), (1, t, n)]  # ragged last microbatch
+        xs = [jax.random.normal(jax.random.fold_in(k1, i), s)
+              for i, s in enumerate(shapes)]
+        xps = [x + 0.1 * jax.random.normal(jax.random.fold_in(k2, i),
+                                           x.shape)
+               for i, x in enumerate(xs)]
+        out = self._engines(xs, xps)
+        eng_loop, ys_loop = out[False]
+        eng_scan, ys_scan = out[True]
+        assert eng_scan.stats["tapped_forwards"] == 6
+        assert len(ys_scan) == len(ys_loop) == 3
+        for tap in ("mlp/in", "bank/in"):
+            cl, cs = eng_loop.covs_for(tap), eng_scan.covs_for(tap)
+            for key in ("xx", "xxp", "xpxp", "count"):
+                np.testing.assert_allclose(
+                    np.asarray(cs[key]), np.asarray(cl[key]),
+                    rtol=2e-5, atol=2e-5, err_msg=f"{tap}/{key}")
+        for ya, yb in zip(ys_scan, ys_loop):
+            np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
+                                       rtol=1e-6)
+
+    def test_scanned_sequential_group_collection(self):
+        """collect_group(scan=True) matches the loop for the one-tap
+        (sequential/replay) path too."""
+        groups, fwd = self._groups_and_fwd()
+        xs = [jax.random.normal(jax.random.fold_in(KEY, i), (1, 96, 72))
+              for i in range(4)]
+        engines = []
+        for scan in (False, True):
+            eng = S.CalibrationEngine.for_unit(groups, fwd, None, xs[0],
+                                               None)
+            eng.collect_group("bank/in", fwd, None, None, xs, xs, None,
+                              None, scan=scan)
+            assert set(eng.accumulators) == {"bank/in"}
+            engines.append(eng)
+        cl, cs = engines[0].covs_for("bank/in"), engines[1].covs_for(
+            "bank/in")
+        for key in ("xx", "xxp", "xpxp", "count"):
+            np.testing.assert_allclose(np.asarray(cs[key]),
+                                       np.asarray(cl[key]),
+                                       rtol=2e-5, atol=2e-5)
