@@ -35,6 +35,11 @@ def main():
                     choices=["sequential", "fused", "hybrid", "auto"],
                     help="collection strategy; auto picks hybrid for MoE "
                          "archs and fused otherwise")
+    ap.add_argument("--calib-dp", type=int, default=0,
+                    help="shard stage-1 collection data-parallel over up to "
+                         "this many devices (0 = off; try "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                         "on CPU)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
@@ -45,6 +50,14 @@ def main():
         is_moe = cfg.moe is not None and cfg.moe.num_experts
         mode = "hybrid" if is_moe else "fused"
 
+    # data-parallel sharded collection: each DP worker runs the tapped
+    # calibration forwards for its own microbatches
+    calib_mesh = None
+    if args.calib_dp > 0:
+        from repro.launch.mesh import make_calib_mesh
+        calib_mesh = make_calib_mesh(args.calib_dp)
+        print("calib mesh:", dict(calib_mesh.shape))
+
     # 1. calibration set (the paper uses 256×2048; smoke scale here)
     calib = calibration_set(cfg, n=16, seq_len=64)
 
@@ -53,7 +66,7 @@ def main():
         params, cfg, calib,
         CompressConfig(ratio=args.ratio, objective="anchored",
                        refine=True, refine_epochs=6, calib_mode=mode,
-                       verbose=True))
+                       calib_mesh=calib_mesh, verbose=True))
     print(compress_ratio_report(params, compressed))
     print("calibration:", report["calibration"])
 

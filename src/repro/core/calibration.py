@@ -25,6 +25,7 @@ activations and all-reduce once per block (a single d×d psum; the jitted
 
 from __future__ import annotations
 
+import functools
 from typing import Dict
 
 import jax
@@ -43,22 +44,28 @@ def init_covs(n: int, experts: int = 0) -> Dict[str, jnp.ndarray]:
     }
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("mesh",))
 def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
-                xp: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+                xp: jnp.ndarray, mesh=None) -> Dict[str, jnp.ndarray]:
     """x, xp: (..., tokens, n) activations (original / shifted).  Leading
     axes beyond the last two are treated as expert/bank axes and must match
-    the accumulator shape."""
+    the accumulator shape.
+
+    ``mesh`` (static, hashable) marks the activations as data-parallel
+    sharded over the mesh's data axes: the accumulated triple is constrained
+    replicated, which lowers to per-device partial products + one n×n psum
+    per update (the sharded-calibration reduction).  Being a static jit arg
+    keeps sharded and unsharded traces in separate cache entries."""
     x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
     xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp
     acc = (covs["xx"], covs["xxp"], covs["xpxp"])
     if covs["xx"].ndim == 3:  # expert banks: (E, tokens, n)
-        xx, xxp, xpxp = ops.cov_accum_banked(x, xp, acc=acc)
+        xx, xxp, xpxp = ops.cov_accum_banked(x, xp, acc=acc, mesh=mesh)
         count = covs["count"] + x.shape[-2]
     else:
         x = x.reshape(-1, x.shape[-1])
         xp = xp.reshape(-1, xp.shape[-1])
-        xx, xxp, xpxp = ops.cov_accum(x, xp, acc=acc)
+        xx, xxp, xpxp = ops.cov_accum(x, xp, acc=acc, mesh=mesh)
         count = covs["count"] + x.shape[0]
     return {"xx": xx, "xxp": xxp, "xpxp": xpxp, "count": count}
 

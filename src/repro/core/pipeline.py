@@ -75,6 +75,7 @@ from repro.core import lowrank as LR
 from repro.core import ranks as R
 from repro.core import refine as RF
 from repro.core import streaming as S
+from repro.distributed import sharding as SH
 from repro.models import blocks as B
 from repro.models import layers as L
 from repro.models import model as M
@@ -84,6 +85,33 @@ LOG = logging.getLogger(__name__)
 
 @dataclasses.dataclass(frozen=True)
 class CompressConfig:
+    """Knobs for ``compress_model`` (Algorithm 2).
+
+    ``calib_mesh`` runs stage-1 collection data-parallel over a mesh:
+
+      * ``None`` (default) — single-device collection, the seed behavior.
+      * ``"auto"`` — build a data-only mesh over every available device
+        (``launch.mesh.make_calib_mesh``).
+      * a ``jax.sharding.Mesh`` — collection shards over its data axes
+        (``pod``/``data``); a ``model`` axis is ignored by collection.
+
+    With a mesh of DP degree dp, the scanned collection sweep folds dp
+    consecutive microbatches onto one scan step and shards the folded batch
+    dim over the data axes, so every DP worker runs the tapped forwards for
+    exactly its own microbatches and contributes partial covariance
+    products; the accumulator carry is reduced/replicated (one n×n psum per
+    update) and the solve + refinement anchors consume fully replicated
+    state, independent of the DP degree.  Per-device tapped forwards drop
+    by dp.  Covariances (hence compressed params) match the unsharded run
+    to fp32 tolerance, not bitwise — token-row summation order changes —
+    so ``calib_mode="sequential"``'s bit-for-bit seed-parity contract only
+    holds with ``calib_mesh=None``.  Sharded collection rides the scan
+    path: a mesh flips the ``scan_collect=None`` auto default to on for
+    every mode; an explicit ``scan_collect=False`` keeps the loop path,
+    which ignores the mesh.  A degenerate mesh (DP degree 1) is treated as
+    ``None``; a microbatch count not divisible by dp collects unfolded.
+    """
+
     ratio: float = 0.8
     objective: str = "anchored"   # agnostic | input_aware | shift_aware | anchored
     refine: bool = True
@@ -97,7 +125,9 @@ class CompressConfig:
     calib_mode: str = "sequential"  # sequential (seed parity) | fused | hybrid
     replay_taps: Tuple[str, ...] = ()  # extra taps replayed in hybrid mode
     scan_collect: Optional[bool] = None  # scan-batched collection sweeps;
-    #   None = auto (on for fused/hybrid, off for sequential seed parity)
+    #   None = auto (on for fused/hybrid or under calib_mesh, else off for
+    #   sequential seed parity)
+    calib_mesh: Any = None        # None | "auto" | Mesh — DP-sharded stage 1
     debug_covs: bool = False      # snapshot per-tap covariances in the report
     verbose: bool = False         # INFO-level progress via logging
 
@@ -355,6 +385,43 @@ def _weight_rank(w, ccfg: CompressConfig) -> int:
 # driver
 
 
+def _resolve_calib_mesh(calib_mesh):
+    """CompressConfig.calib_mesh -> an active mesh or None.  ``"auto"``
+    builds a data-only mesh over every available device; a degenerate mesh
+    (DP degree 1) collapses to None so nothing is ever resharded."""
+    mesh = calib_mesh
+    if isinstance(mesh, str):
+        if mesh != "auto":
+            raise ValueError(f"unknown calib_mesh {mesh!r} "
+                             "(expected None, 'auto', or a Mesh)")
+        from repro.launch.mesh import make_calib_mesh
+        mesh = make_calib_mesh()
+    if mesh is not None and "data" not in mesh.axis_names:
+        raise ValueError(
+            f"calib_mesh needs a 'data' axis (got axes {mesh.axis_names}); "
+            "collection shards over data/pod only — use "
+            "launch.mesh.make_calib_mesh() for a data-only mesh")
+    if mesh is not None and SH.dp_degree(mesh) <= 1:
+        mesh = None
+    return mesh
+
+
+def _mesh_label(calib_mesh):
+    """Report-friendly description (Mesh objects don't survive asdict)."""
+    if calib_mesh is None or isinstance(calib_mesh, str):
+        return calib_mesh
+    return f"mesh{dict(calib_mesh.shape)}"
+
+
+def _place_stream(stream, mesh):
+    """Commit every microbatch of a stream to the DP batch sharding (the
+    batch dim over the data axes, replicated when not divisible) so the
+    loop-path forwards, refinement, and propagation run data-parallel too."""
+    if mesh is None or stream is None:
+        return stream
+    return [jax.device_put(x, SH.batch_shardings(x, mesh)) for x in stream]
+
+
 def _embed_stream(params, cfg, calib: Dict[str, jnp.ndarray], mb: int):
     """Initial hidden stream batches (list of (mb, L, d)) + aux streams."""
     n = calib["tokens"].shape[0]
@@ -380,18 +447,26 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     """
     if ccfg.calib_mode not in ("sequential", "fused", "hybrid"):
         raise ValueError(f"unknown calib_mode {ccfg.calib_mode!r}")
-    # scan-batched collection defaults on for fused/hybrid; sequential's
-    # contract is bit-for-bit seed parity, which the loop path guarantees
+    mesh = _resolve_calib_mesh(ccfg.calib_mesh)
+    # scan-batched collection defaults on for fused/hybrid and whenever a
+    # collection mesh is active (DP sharding rides the scan sweep);
+    # sequential's bit-for-bit seed-parity contract needs the loop path —
+    # and holds only without a mesh (fp32 tolerance under DP)
     scan = ccfg.scan_collect
     if scan is None:
-        scan = ccfg.calib_mode != "sequential"
+        scan = ccfg.calib_mode != "sequential" or mesh is not None
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
     units = unroll_units(params, cfg)
-    report: Dict[str, Any] = {"units": [], "config": dataclasses.asdict(ccfg)}
+    report: Dict[str, Any] = {
+        "units": [],
+        "config": dataclasses.asdict(dataclasses.replace(
+            ccfg, calib_mesh=_mesh_label(ccfg.calib_mesh)))}
 
     mb = ccfg.microbatch
     x_stream = _embed_stream(params, cfg, calib, mb)       # original
     xp_stream = [jnp.copy(x) for x in x_stream]            # shifted
+    x_stream = _place_stream(x_stream, mesh)
+    xp_stream = _place_stream(xp_stream, mesh)
 
     # whisper: encoder stream runs first; enc_out streams feed cross-attn
     enc_orig: Optional[List] = None
@@ -405,8 +480,8 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
             enc_in.append(frames.astype(jnp.dtype(cfg.dtype)) +
                           M.sinusoid_positions(jnp.arange(le), cfg.d_model
                                                ).astype(jnp.dtype(cfg.dtype))[None])
-        enc_orig = enc_in
-        enc_comp = [jnp.copy(x) for x in enc_in]
+        enc_orig = _place_stream(enc_in, mesh)
+        enc_comp = _place_stream([jnp.copy(x) for x in enc_in], mesh)
 
     cur_streams = {"enc": (enc_orig, enc_comp), "dec": (x_stream, xp_stream)}
     shared_done: Dict[str, Any] = {}
@@ -463,7 +538,7 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         if ccfg.objective != "agnostic":
             engine = S.CalibrationEngine.for_unit(
                 groups, fwd_taps, orig_p, xs[0],
-                None if dec_aux_o is None else dec_aux_o[0])
+                None if dec_aux_o is None else dec_aux_o[0], mesh=mesh)
             if ccfg.calib_mode == "fused":
                 anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
                                                xs, xps, dec_aux_o, dec_aux_c,
@@ -539,6 +614,13 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
             xs[i] = y_anchor[i].astype(xs[i].dtype)
             xps[i] = fwd(cur_p, xps[i],
                          None if dec_aux_c is None else dec_aux_c[i])
+            if mesh is not None:
+                # keep the streams committed to the canonical DP placement
+                # (un-folded anchors inherit an awkward layout otherwise)
+                xs[i] = jax.device_put(xs[i],
+                                       SH.batch_shardings(xs[i], mesh))
+                xps[i] = jax.device_put(xps[i],
+                                        SH.batch_shardings(xps[i], mesh))
         unit.params = cur_p
         if unit.shared:
             shared_done[unit.kind] = {"orig": orig_p, "comp": cur_p}
@@ -555,6 +637,10 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                                for u in report["units"]),
         "replayed_groups": sum(u.get("replayed_groups", 0)
                                for u in report["units"]),
+        # DP degree of the collection mesh: each tapped forward in the
+        # counts above covered calib_dp microbatches at once (per-device
+        # forwards = the counts as reported)
+        "calib_dp": 1 if mesh is None else SH.dp_degree(mesh),
     }
     new_params = restack_units(params, cfg, units)
     return new_params, report

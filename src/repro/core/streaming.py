@@ -47,9 +47,25 @@ default for fused/hybrid collection.  Microbatches with a ragged tail
 (calibration size not divisible by the microbatch) scan the uniform prefix
 and fall back to the loop for the remainder.
 
+Data-parallel sharded collection: when the engine is built with a ``mesh``
+(``CompressConfig.calib_mesh``), the scan sweep folds dp consecutive
+microbatches onto one scan step — the stacked stream reshapes from
+``(B, mb, L, d)`` to ``(B/dp, dp·mb, L, d)`` and the folded batch dim is
+placed with ``distributed.sharding.calib_stream_spec`` over the mesh's data
+axes, so every DP worker runs the tapped forward on exactly its own
+microbatches.  Covariance accumulation contracts token rows across the
+sharded dim; the accumulator carry is constrained replicated
+(``cov_spec``), which GSPMD lowers to per-worker partial {XᵀX, XᵀX',
+X'ᵀX'} products + one n×n psum per update.  The solve consumes fully
+reduced replicated covariances, so it is bitwise-independent of the DP
+degree; the covariances themselves match the unsharded sweep to fp32
+tolerance (token-row summation order changes).  A microbatch count not
+divisible by dp falls back to the unfolded sweep.
+
 The engine counts every tapped forward it issues (``stats``); the driver
 surfaces the counts in its per-unit report so benchmarks and tests can
-assert the reduction.
+assert the reduction.  Under DP folding one tapped forward covers dp
+microbatches, so the per-device count drops by the DP degree.
 """
 
 from __future__ import annotations
@@ -62,6 +78,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import calibration as C
+from repro.distributed import sharding as SH
 from repro.models import layers as L
 
 # (param_path, tap_name, is_expert_bank[, replay]) — see
@@ -72,12 +89,19 @@ Groups = Sequence[Tuple[str, Sequence[Spec]]]
 
 @functools.lru_cache(maxsize=64)
 def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
-              keep_orig_outputs: bool):
+              keep_orig_outputs: bool, backend: str, mesh):
     """The jitted scan-over-microbatches collection sweep, memoized per
-    (tapped apply fn, tap subset, aux/anchor shape).  ``fwd_taps`` itself
-    is memoized per (kind, cfg, seq_len) — see ``pipeline.make_unit_apply``
-    — so every same-kind unit reuses one wrapper and its trace cache
-    instead of recompiling the identical double-forward per sweep."""
+    (tapped apply fn, tap subset, aux/anchor shape, backend, mesh).
+    ``fwd_taps`` itself is memoized per (kind, cfg, seq_len) — see
+    ``pipeline.make_unit_apply`` — so every same-kind unit reuses one
+    wrapper and its trace cache instead of recompiling the identical
+    double-forward per sweep.
+
+    ``backend`` is part of the cache key so the carry-donation decision is
+    made per backend, not baked into the first trace a process happens to
+    take — a backend switch within a process must not reuse a stale
+    donation choice.  ``mesh`` (a hashable ``jax.sharding.Mesh`` or None)
+    routes the accumulator updates through the data-parallel reduction."""
     def sweep(covs, orig_p, cur_p, batch):
         def step(carry, mb):
             if have_aux:
@@ -86,13 +110,14 @@ def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
                 (x, xp), ao, ac = mb, None, None
             y, taps_o = fwd_taps(orig_p, x, ao)
             _, taps_c = fwd_taps(cur_p, xp, ac)
-            new = {t: C.update_covs(carry[t], taps_o[t], taps_c[t])
+            new = {t: C.update_covs(carry[t], taps_o[t], taps_c[t],
+                                    mesh=mesh)
                    for t in taps}
             return new, (y if keep_orig_outputs else jnp.zeros(()))
         return jax.lax.scan(step, covs, batch)
 
     # donate the accumulator carry where the backend can alias it in place
-    donate = (0,) if jax.default_backend() != "cpu" else ()
+    donate = (0,) if backend != "cpu" else ()
     return jax.jit(sweep, donate_argnums=donate)
 
 
@@ -123,8 +148,12 @@ class CalibrationEngine:
     """
 
     def __init__(self, groups: Groups,
-                 shapes: Dict[str, jax.ShapeDtypeStruct]):
+                 shapes: Dict[str, jax.ShapeDtypeStruct], mesh=None):
         self.groups = list(groups)
+        # data-parallel collection mesh (None = single-device collection);
+        # a degenerate mesh is treated as None so nothing is ever resharded
+        self.mesh = mesh if (mesh is not None
+                             and SH.dp_degree(mesh) > 1) else None
         # tap -> (is_bank, n, experts); accumulators materialize lazily so
         # sequential mode holds one group's 3·n² state at a time (seed peak
         # memory) while fused mode grows to all taps as they stream in
@@ -134,6 +163,12 @@ class CalibrationEngine:
             sd = shapes[tap]
             self._spec[tap] = (is_bank, sd.shape[-1],
                                sd.shape[0] if is_bank else 0)
+        # routed expert banks make the unit forward BATCH-SIZE-DEPENDENT
+        # (capacity = ceil(tokens·k/E·factor) over the whole batch, overflow
+        # drops): folding dp microbatches into one forward would change
+        # which tokens drop, so bank-bearing units always collect unfolded
+        # — DP sharding must never change semantics, only placement
+        self._has_bank = any(spec[0] for spec in self._spec.values())
         self.accumulators: Dict[str, TapAccumulator] = {}
         self._released: Set[str] = set()
         # stacked microbatch streams, shared across this unit's scan sweeps
@@ -144,11 +179,11 @@ class CalibrationEngine:
 
     @classmethod
     def for_unit(cls, groups: Groups, fwd_taps: Callable, params,
-                 x0, aux0) -> "CalibrationEngine":
+                 x0, aux0, mesh=None) -> "CalibrationEngine":
         """Build the registry from one shape-only tap discovery (no data
         touched): every accumulator's final size is known up front."""
         shapes = L.tap_shapes(fwd_taps, params, x0, aux0)
-        return cls(groups, shapes)
+        return cls(groups, shapes, mesh=mesh)
 
     def _acc(self, tap: str) -> TapAccumulator:
         if tap in self._released:
@@ -220,44 +255,73 @@ class CalibrationEngine:
             self.consume(taps_o, taps_c, only=only)
         return ys
 
-    def _stacked(self, role: str, seq: Sequence, n: int) -> jnp.ndarray:
+    def _stacked(self, role: str, seq: Sequence, n: int,
+                 fold: int = 1) -> jnp.ndarray:
         """Stack one stream's uniform microbatch prefix onto a scan axis,
         cached per role — hybrid's replay sweeps reuse the fused pass's
-        stack instead of re-copying the whole calibration stream."""
-        key = (role, n)
+        stack instead of re-copying the whole calibration stream.
+
+        ``fold > 1`` (data-parallel collection) merges ``fold`` consecutive
+        microbatches onto each scan step — ``(n, mb, ...)`` becomes
+        ``(n/fold, fold·mb, ...)`` — and places the result so the folded
+        batch dim shards over the mesh's data axes: shard w of step s is
+        exactly microbatch ``s·fold + w``."""
+        key = (role, n, fold)
         hit = self._stack_cache.get(key)
         if hit is None:
             hit = jnp.stack(seq[:n])
+            if fold > 1:
+                hit = hit.reshape((n // fold, fold * hit.shape[1])
+                                  + hit.shape[2:])
+                hit = jax.device_put(
+                    hit, SH.calib_stream_sharding(hit, self.mesh))
             self._stack_cache[key] = hit
         return hit
 
     def _collect_scan(self, fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
                       *, only=None, keep_orig_outputs=False):
         taps = [t for t in self._spec if only is None or t in only]
-        # uniform-shape prefix (the ragged tail of an uneven calibration
-        # split cannot stack into a scanned batch axis)
+        # uniform-shape prefix over EVERY scanned stream (the ragged tail of
+        # an uneven calibration split cannot stack into a scanned batch
+        # axis) — aux streams (whisper encoder outputs) ride the same scan,
+        # so a ragged aux microbatch must break the prefix too
+        streams = [s for s in (xs, xps, aux_o, aux_c) if s is not None]
         n_uni = len(xs)
         for i in range(1, len(xs)):
-            if xs[i].shape != xs[0].shape or xps[i].shape != xps[0].shape:
+            if any(s[i].shape != s[0].shape for s in streams):
                 n_uni = i
                 break
         ys: Optional[List] = [] if keep_orig_outputs else None
         if n_uni >= 1 and (taps or keep_orig_outputs):
+            # data-parallel: fold dp microbatches per scan step so each DP
+            # worker sweeps its own share (per-device forwards drop by dp);
+            # a prefix not divisible by dp — or a bank-bearing unit, whose
+            # routed-capacity forward is batch-size-dependent — keeps the
+            # unfolded sweep
+            fold = 1
+            if self.mesh is not None and not self._has_bank:
+                dp = SH.dp_degree(self.mesh)
+                if n_uni % dp == 0:
+                    fold = dp
             covs0 = {t: self._acc(t).covs for t in taps}
             have_aux = aux_o is not None
-            batches = [self._stacked("xs", xs, n_uni),
-                       self._stacked("xps", xps, n_uni)]
+            batches = [self._stacked("xs", xs, n_uni, fold),
+                       self._stacked("xps", xps, n_uni, fold)]
             if have_aux:
-                batches += [self._stacked("aux_o", aux_o, n_uni),
-                            self._stacked("aux_c", aux_c, n_uni)]
+                batches += [self._stacked("aux_o", aux_o, n_uni, fold),
+                            self._stacked("aux_c", aux_c, n_uni, fold)]
             sweep = _sweep_fn(fwd_taps, tuple(taps), have_aux,
-                              keep_orig_outputs)
+                              keep_orig_outputs, jax.default_backend(),
+                              self.mesh if fold > 1 else None)
             covs, ys_s = sweep(covs0, orig_p, cur_p, tuple(batches))
             for t in taps:
                 self.accumulators[t].covs = covs[t]
-            self.stats["tapped_forwards"] += 2 * n_uni
-            self.stats["tap_updates"] += len(taps) * n_uni
+            n_sweep = n_uni // fold
+            self.stats["tapped_forwards"] += 2 * n_sweep
+            self.stats["tap_updates"] += len(taps) * n_sweep
             if ys is not None:
+                if fold > 1:  # un-fold the anchors back to per-microbatch
+                    ys_s = ys_s.reshape((n_uni,) + xs[0].shape)
                 ys.extend(ys_s[i] for i in range(n_uni))
         if n_uni < len(xs):  # ragged tail: per-microbatch loop
             tail = self._collect_loop(

@@ -259,6 +259,43 @@ def activation_spec(mesh: Mesh) -> P:
     return P(dp_axes(mesh), None, None)
 
 
+def dp_degree(mesh: Mesh) -> int:
+    """Total data-parallel degree of a mesh (product of the data axes)."""
+    return _axis_size(mesh, dp_axes(mesh))
+
+
+# ---------------------------------------------------------------------------
+# calibration-collection rules (sharded stage-1, core.streaming)
+#
+# The scanned collection sweep folds dp consecutive microbatches onto one
+# scan step — (B, mb, L, d) -> (B/dp, dp·mb, L, d) — and shards the folded
+# batch dim so every DP worker runs the tapped forward on exactly its own
+# microbatches.  Covariance accumulation contracts token rows across that
+# sharded dim, so each worker produces partial {XᵀX, XᵀX', X'ᵀX'} products;
+# the accumulator carry is constrained to ``cov_spec`` (replicated), which
+# GSPMD materializes as one n×n psum per update.
+
+
+def calib_stream_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Stacked calibration stream (scan, batch, ...): the scan axis stays
+    replicated (lax.scan iterates it), the per-step batch dim shards over
+    the data axes.  Degrades to replication when the batch dim does not
+    divide the DP degree."""
+    axes = [None, dp_axes(mesh)] + [None] * (len(shape) - 2)
+    return _fit(mesh, axes, shape)
+
+
+def calib_stream_sharding(x, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, calib_stream_spec(x.shape, mesh))
+
+
+def cov_spec(mesh: Mesh) -> P:
+    """Covariance accumulators are always fully replicated: the carry is the
+    all-reduced sum of per-worker partial products, and the downstream solve
+    must be bitwise-independent of the DP degree."""
+    return P()
+
+
 def _cache_leaf_spec(kind: str, name: str, shape, mesh: Mesh) -> P:
     """Spec for one cache leaf with NO leading layer-stack dim.
 

@@ -41,57 +41,81 @@ def lowrank_matmul(x, v, u, *, force_pallas: bool = False,
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
     xf, t0 = _pad_dim(xf, 0, 256)
+    # the contraction dim n needs lane alignment like every other dim:
+    # zero-padding x's columns and v's rows adds exact zero contributions
+    xf, _ = _pad_dim(xf, 1, 128)
+    v, _ = _pad_dim(v, 0, 128)
     v, _ = _pad_dim(v, 1, 128)
     u, _ = _pad_dim(u, 0, 128)
     u, m0 = _pad_dim(u, 1, 256)
-    y = _lowrank_kernel(xf, v, u, bt=256, bn=min(512, xf.shape[1]),
+    n = xf.shape[1]
+    bn = 512 if n % 512 == 0 else next(b for b in (384, 256, 128)
+                                       if n % b == 0)
+    y = _lowrank_kernel(xf, v, u, bt=256, bn=min(bn, n),
                         bm=256, interpret=interpret)
     return y[:t0, :m0].reshape(*lead, m0)
 
 
-def _accumulate(outs, acc):
+def _accumulate(outs, acc, mesh=None):
     """Fold a covariance triple into existing fp32 accumulators.
 
     Keeping the add here (instead of at every call site) lets XLA alias the
     accumulator buffers in place when they are donated — the scanned
     collection step in ``core.streaming`` carries {xx, xxp, xpxp} through a
     ``lax.scan`` with donated carry, so each triple is updated without a
-    fresh 3·n² allocation per microbatch."""
-    if acc is None:
-        return outs
-    return tuple(a + o for a, o in zip(acc, outs))
+    fresh 3·n² allocation per microbatch.
+
+    ``mesh`` marks accumulate-into under data-parallel sharding: the inputs'
+    token rows are sharded over the mesh's data axes, so each device holds a
+    PARTIAL product.  Constraining the accumulated triple to the replicated
+    ``cov_spec`` makes GSPMD reduce the partials (one n×n psum per update)
+    right here, instead of leaking sharded partial-sums into the solve."""
+    outs = outs if acc is None else tuple(a + o for a, o in zip(acc, outs))
+    if mesh is not None:
+        from repro.distributed import sharding as SH
+        sh = jax.sharding.NamedSharding(mesh, SH.cov_spec(mesh))
+        outs = tuple(jax.lax.with_sharding_constraint(o, sh) for o in outs)
+    return outs
 
 
-def cov_accum(x, xp, *, acc=None, force_pallas: bool = False,
+def cov_accum(x, xp, *, acc=None, mesh=None, force_pallas: bool = False,
               interpret: bool = False):
     """(T, n) x2 -> (xx, xxp, xpxp) fp32.  Token padding is exact (zero
     rows).  ``acc`` optionally supplies an existing (xx, xxp, xpxp) triple
-    to accumulate into (returned as acc + products)."""
-    if not (use_pallas() or force_pallas):
-        return _accumulate(ref.cov_accum_ref(x, xp), acc)
+    to accumulate into (returned as acc + products); ``mesh`` replicates the
+    result across a data-parallel mesh (see ``_accumulate``)."""
+    if mesh is not None or not (use_pallas() or force_pallas):
+        # sharded collection always takes the XLA contraction: the fused
+        # Pallas kernel carries no SPMD partitioning rule, so GSPMD would
+        # all-gather the sharded token batch around it — the einsum
+        # partitions into per-device partials + the one psum we want
+        return _accumulate(ref.cov_accum_ref(x, xp), acc, mesh)
     n = x.shape[-1]
     x, _ = _pad_dim(x.reshape(-1, n), 0, 512)
     xp, _ = _pad_dim(xp.reshape(-1, n), 0, 512)
     bi = 256 if n % 256 == 0 else n
     return _accumulate(_cov_kernel(x, xp, bi=bi, bt=512,
-                                   interpret=interpret), acc)
+                                   interpret=interpret), acc, mesh)
 
 
-def cov_accum_banked(x, xp, *, acc=None, force_pallas: bool = False,
+def cov_accum_banked(x, xp, *, acc=None, mesh=None,
+                     force_pallas: bool = False,
                      interpret: bool = False):
     """Expert-bank covariance triple: (E, C, n) x2 -> each (E, n, n) fp32.
 
     vmaps the fused single-pass kernel over the expert axis; capacity
     padding is exact (zero-padded slots add zero outer products).  ``acc``
-    optionally supplies an existing triple to accumulate into."""
-    if not (use_pallas() or force_pallas):
-        return _accumulate(ref.cov_accum_banked_ref(x, xp), acc)
+    optionally supplies an existing triple to accumulate into; ``mesh``
+    replicates the result across a data-parallel mesh (and, as in
+    ``cov_accum``, forces the partitionable XLA contraction)."""
+    if mesh is not None or not (use_pallas() or force_pallas):
+        return _accumulate(ref.cov_accum_banked_ref(x, xp), acc, mesh)
     n = x.shape[-1]
     x, _ = _pad_dim(x, 1, 512)
     xp, _ = _pad_dim(xp, 1, 512)
     bi = 256 if n % 256 == 0 else n
     fn = functools.partial(_cov_kernel, bi=bi, bt=512, interpret=interpret)
-    return _accumulate(jax.vmap(fn)(x, xp), acc)
+    return _accumulate(jax.vmap(fn)(x, xp), acc, mesh)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

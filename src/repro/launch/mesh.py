@@ -23,3 +23,16 @@ def make_host_mesh(model_parallel: int = 1):
     n = len(jax.devices())
     return jax.make_mesh((n // model_parallel, model_parallel),
                          ("data", "model"))
+
+
+def make_calib_mesh(dp: int = 0):
+    """Data-only mesh for sharded stage-1 calibration collection
+    (``CompressConfig.calib_mesh="auto"`` resolves here).
+
+    Covariance accumulation is a sum over token rows, so calibration shards
+    purely over data — no model axis.  ``dp`` caps the degree (0 = every
+    available device)."""
+    n = len(jax.devices())
+    if dp:
+        n = min(dp, n)
+    return jax.make_mesh((n,), ("data",))

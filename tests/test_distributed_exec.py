@@ -122,6 +122,62 @@ print("OK")
 """)
 
 
+def test_sharded_calibration_dp_invariance():
+    """CompressConfig.calib_mesh shards stage-1 collection over 8 DP
+    workers: covariance triples and final compressed params must match the
+    unsharded run to fp32 tolerance, with per-device tapped forwards
+    reduced by the DP degree."""
+    run_child(COMMON + """
+import dataclasses
+from repro.core import CompressConfig, compress_model
+from repro.data import calibration_set
+from repro.launch.mesh import make_calib_mesh
+from repro.models import model as M
+
+cfg = get_smoke_config("llama-7b").replace(dtype="float32")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+calib = calibration_set(cfg, 16, 32)
+base = CompressConfig(ratio=0.6, refine=False, rank_multiple=1,
+                      microbatch=2, calib_mode="fused", debug_covs=True)
+ref_p, rep1 = compress_model(params, cfg, calib, base)
+mesh = make_calib_mesh()
+assert dict(mesh.shape) == {"data": 8}, mesh
+dp_p, rep8 = compress_model(params, cfg, calib,
+                            dataclasses.replace(base, calib_mesh=mesh))
+
+# per-device tapped forwards reduced by the DP degree
+assert rep8["calibration"]["calib_dp"] == 8
+assert rep1["calibration"]["calib_dp"] == 1
+assert (rep8["calibration"]["tapped_forwards"] * 8
+        == rep1["calibration"]["tapped_forwards"]), (
+    rep1["calibration"], rep8["calibration"])
+
+# covariance triples match to fp32 tolerance
+checked = 0
+for u1, u8 in zip(rep1["units"], rep8["units"]):
+    for tap, c1 in u1.get("covs", {}).items():
+        c8 = u8["covs"][tap]
+        for key in ("xx", "xxp", "xpxp", "count"):
+            a, b = np.asarray(c1[key]), np.asarray(c8[key])
+            np.testing.assert_allclose(
+                b, a, rtol=2e-4, atol=2e-4 * max(np.abs(a).max(), 1.0),
+                err_msg=f"{u1['name']}/{tap}/{key}")
+            checked += 1
+assert checked > 0
+
+# final compressed params match to fp32 tolerance
+l1, d1 = jax.tree_util.tree_flatten(ref_p)
+l8, d8 = jax.tree_util.tree_flatten(dp_p)
+assert d1 == d8
+for i, (a, b) in enumerate(zip(l1, l8)):
+    a, b = np.asarray(a), np.asarray(b)
+    np.testing.assert_allclose(
+        b, a, rtol=2e-3, atol=2e-3 * max(np.abs(a).max(), 1.0),
+        err_msg=f"leaf {i}")
+print("OK")
+""")
+
+
 def test_compressed_serve_step_sharded():
     run_child(COMMON + """
 from repro.core.factorized import factorize_params

@@ -118,6 +118,29 @@ def test_flash_attention_bf16():
                                rtol=3e-2, atol=3e-2)
 
 
+@pytest.mark.parametrize("t,n,k,m", [
+    (64, 100, 24, 80),     # n far from any lane multiple
+    (300, 200, 32, 120),   # tokens AND n unaligned
+    (96, 72, 16, 56),      # everything tiny and odd
+    (128, 640, 128, 256),  # n lane-aligned but not divisible by 512
+])
+def test_lowrank_matmul_ops_unaligned_n_parity(t, n, k, m):
+    """ops.lowrank_matmul must pad the contraction dim n to a lane multiple
+    (like tokens/k/m) and pick a block size that divides it — zero-padding
+    x's columns and v's rows is exact, so the padded kernel must match the
+    reference bit-for-bit-close on d_models not divisible by 128."""
+    from repro.kernels import ops
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (t, n), jnp.float32)
+    v = jax.random.normal(k2, (n, k)) / np.sqrt(n)
+    u = jax.random.normal(k3, (k, m)) / np.sqrt(max(k, 1))
+    y = ops.lowrank_matmul(x, v, u, force_pallas=True, interpret=True)
+    want = ref.lowrank_matmul_ref(x, v, u)
+    assert y.shape == (t, m)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_ops_wrappers_cpu_fallback():
     from repro.kernels import ops
     x = jax.random.normal(KEY, (64, 96))

@@ -175,6 +175,17 @@ class TestSeedParity:
                                           rank_multiple=1,
                                           calib_mode="bogus"))
 
+    @pytest.mark.parametrize("bad", ["bogus", "dataless"])
+    def test_bad_calib_mesh_raises(self, bad):
+        """Unknown strings and meshes without a data axis both get a clear
+        ValueError, not a KeyError from deep inside the sharding rules."""
+        cfg, params, calib = setup(n=4)
+        mesh = bad if bad == "bogus" else jax.make_mesh((1,), ("model",))
+        with pytest.raises(ValueError, match="calib_mesh"):
+            compress_model(params, cfg, calib,
+                           CompressConfig(refine=False, rank_multiple=1,
+                                          calib_mesh=mesh))
+
 
 class TestEngineUnits:
     def _toy_groups_and_fwd(self):
@@ -342,6 +353,38 @@ class TestScanCollection:
         for ya, yb in zip(ys_scan, ys_loop):
             np.testing.assert_allclose(np.asarray(ya), np.asarray(yb),
                                        rtol=1e-6)
+
+    def test_scan_handles_ragged_aux_stream(self):
+        """A ragged AUX stream (whisper-style encoder outputs whose tail
+        microbatch is shorter) must break the scan's uniform prefix too:
+        only xs/xps shapes used to be checked, so mismatched aux shapes
+        crashed the stack instead of falling back to the loop."""
+        groups = [("mlp/in", [("mlp.w", "mlp/in", False)])]
+
+        def fwd(p, x, aux):
+            store = {}
+            with L.sowing(store):
+                L.sow("mlp/in", x + aux.mean())
+            return x, store
+
+        xs = [jax.random.normal(jax.random.fold_in(KEY, i), (1, 96, 72))
+              for i in range(3)]
+        # x/x' shapes are uniform; ONLY the aux tail is ragged
+        aux = [jnp.ones((1, 16, 8)), jnp.ones((1, 16, 8)),
+               jnp.ones((1, 7, 8))]
+        engines = []
+        for scan in (False, True):
+            eng = S.CalibrationEngine.for_unit(groups, fwd, None, xs[0],
+                                               aux[0])
+            eng.collect_fused(fwd, None, None, xs, xs, aux, aux, scan=scan)
+            engines.append(eng)
+        cl = engines[0].covs_for("mlp/in")
+        cs = engines[1].covs_for("mlp/in")
+        for key in ("xx", "xxp", "xpxp", "count"):
+            np.testing.assert_allclose(np.asarray(cs[key]),
+                                       np.asarray(cl[key]),
+                                       rtol=2e-5, atol=2e-5)
+        assert engines[1].stats["tapped_forwards"] == 6
 
     def test_scanned_sequential_group_collection(self):
         """collect_group(scan=True) matches the loop for the one-tap
