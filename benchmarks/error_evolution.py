@@ -1,10 +1,19 @@
 """Fig 1 / Fig 4 analogue: per-block error evolution across depth.
 
-Propagates held-out data through the original and compressed models
-block-by-block and records MSE + cosine distance of block outputs at every
-depth.  Paper claims: naive SVD saturates cosine distance ≈ 1 from the first
+Paper claims: naive SVD saturates cosine distance ≈ 1 from the first
 layers; AA-SVD stays below input-aware at every depth; errors grow with
 depth for all data-driven methods.
+
+Per-block MSE comes straight from the compression report's per-unit
+``post_refine_mse`` / ``pre_refine_mse`` fields (ISSUE 4): the pipeline
+already measures MSE(L_i(X), L'_i(X')) against the anchor outputs for
+every unit, so the private forward loop stops being a second source of
+truth for it.  Note the distribution change this implies: report MSE is
+measured on the CALIBRATION streams (for refined runs, the very data
+refinement minimized — in-sample), where the previous loop and the cosine
+columns use a held-out batch.  The mse/cos halves of each row are
+therefore different-data views of the same block; the forward loop below
+survives only for cosine distance, which the report does not carry.
 """
 
 from __future__ import annotations
@@ -21,7 +30,9 @@ from repro.data import calibration_set
 from repro.models import model as M
 
 
-def block_errors(cfg, orig_params, comp_params, batch) -> List[dict]:
+def block_cos_dists(cfg, orig_params, comp_params, batch) -> List[float]:
+    """Held-out per-depth cosine distance of block outputs (original vs
+    compressed streams propagated side by side)."""
     units_o = P.unroll_units(orig_params, cfg)
     units_c = P.unroll_units(comp_params, cfg)
     x_o = M._embed_inputs(orig_params, cfg, batch)
@@ -38,11 +49,9 @@ def block_errors(cfg, orig_params, comp_params, batch) -> List[dict]:
         x_c = fwd(pc, x_c, None)
         a = np.asarray(x_o, np.float32).reshape(-1, x_o.shape[-1])
         b = np.asarray(x_c, np.float32).reshape(-1, x_c.shape[-1])
-        mse = float(np.mean((a - b) ** 2))
-        cos = float(np.mean(1.0 - np.sum(a * b, -1) /
-                            (np.linalg.norm(a, axis=-1) *
-                             np.linalg.norm(b, axis=-1) + 1e-9)))
-        out.append({"block": uo.name, "mse": mse, "cos_dist": cos})
+        out.append(float(np.mean(1.0 - np.sum(a * b, -1) /
+                                 (np.linalg.norm(a, axis=-1) *
+                                  np.linalg.norm(b, axis=-1) + 1e-9))))
     return out
 
 
@@ -55,11 +64,24 @@ def run(ctx) -> List[str]:
     for obj, refine, label in (("agnostic", False, "naive_svd"),
                                ("input_aware", False, "svd_llm"),
                                ("anchored", True, "aa_svd")):
-        comp, _ = compress_model(
+        comp, rep = compress_model(
             params, cfg, calib,
             CompressConfig(ratio=0.6, objective=obj, refine=refine,
                            refine_epochs=6, rank_multiple=1, microbatch=16))
-        errs = block_errors(cfg, params, comp, batch)
+        cos = block_cos_dists(cfg, params, comp, batch)
+        errs = []
+        kind_mse = {}  # compressed-site mse per kind, for reuse sites
+        for u, c in zip(rep["units"], cos):
+            mse = u.get("post_refine_mse", u.get("pre_refine_mse"))
+            if mse is None:
+                # reused shared-site units carry no mse fields; inherit the
+                # SHARED unit's own compressed-site number (first invocation
+                # site, always earlier in the unit order) so the depth curve
+                # stays dense
+                mse = kind_mse.get(u.get("kind"), float("nan"))
+            else:
+                kind_mse.setdefault(u.get("kind"), mse)
+            errs.append({"block": u["name"], "mse": mse, "cos_dist": c})
         curves[label] = errs
         for i, e in enumerate(errs):
             rows.append(f"error_evo_{label}_block{i},0.0,"
@@ -80,9 +102,12 @@ def run(ctx) -> List[str]:
         "F4b_aasvd_beats_naive_every_depth":
             all(a["cos_dist"] <= n["cos_dist"] + 1e-6 for a, n in
                 zip(curves["aa_svd"], curves["naive_svd"])),
+        # cross-label comparison stays on the HELD-OUT cosine column:
+        # aa_svd's report mse is the in-sample objective refinement just
+        # minimized, so an mse-based PASS would not evidence generalization
         "F4c_aasvd_final_leq_svdllm":
-            curves["aa_svd"][last]["mse"] <=
-            curves["svd_llm"][last]["mse"] * 1.1,
+            curves["aa_svd"][last]["cos_dist"] <=
+            curves["svd_llm"][last]["cos_dist"] * 1.1,
     }
     for name, ok in checks.items():
         rows.append(f"claim_{name},0.0,{'PASS' if ok else 'FAIL'}")

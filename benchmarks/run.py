@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   compression_quality  — Tables 1/2/5 (method × ratio × refinement PPL matrix)
   error_evolution      — Figures 1/4 (per-depth MSE / cosine distance)
   calibration_size     — Figure 3 (quality vs calibration budget)
+  refine_speed         — stage-2 scanned-dispatch claim (ISSUE 4)
   memory_speedup       — App. B.3/B.4 + Table 4 (ratio math, params, serving)
   kernel_bench         — Pallas kernel motivations (traffic models + timings)
   roofline_report      — §Roofline summary from the dry-run artifacts
@@ -23,7 +24,7 @@ def main() -> None:
 
     from benchmarks import (calibration_size, compression_quality,
                             error_evolution, kernel_bench, memory_speedup,
-                            roofline_report)
+                            refine_speed, roofline_report)
     from benchmarks.common import train_small_model
 
     t0 = time.time()
@@ -32,7 +33,8 @@ def main() -> None:
     print(f"train_substrate_200steps,0.0,final_loss={final_loss:.3f}")
     ctx = {"cfg": cfg, "params": params}
     for mod in (compression_quality, error_evolution, calibration_size,
-                memory_speedup, kernel_bench, roofline_report):
+                refine_speed, memory_speedup, kernel_bench,
+                roofline_report):
         for row in mod.run(ctx):
             print(row)
     print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},end-to-end")

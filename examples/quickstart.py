@@ -39,7 +39,13 @@ def main():
                     help="shard stage-1 collection data-parallel over up to "
                          "this many devices (0 = off; try "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-                         "on CPU)")
+                         "on CPU; the mesh also runs stage-2 refinement DP)")
+    ap.add_argument("--refine-epochs", type=int, default=6,
+                    help="block-refinement epochs (paper default 25; smoke "
+                         "default 6)")
+    ap.add_argument("--no-refine", action="store_true",
+                    help="skip stage-2 block refinement (closed-form solve "
+                         "only)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(dtype="float32")
@@ -65,10 +71,13 @@ def main():
     compressed, report = compress_model(
         params, cfg, calib,
         CompressConfig(ratio=args.ratio, objective="anchored",
-                       refine=True, refine_epochs=6, calib_mode=mode,
+                       refine=not args.no_refine,
+                       refine_epochs=args.refine_epochs, calib_mode=mode,
                        calib_mesh=calib_mesh, verbose=True))
     print(compress_ratio_report(params, compressed))
     print("calibration:", report["calibration"])
+    if not args.no_refine:
+        print("refinement:", report["refinement"])
 
     # 3. the compressed model is a drop-in for serving
     server = Server(cfg, compressed, max_len=64)

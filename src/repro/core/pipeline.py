@@ -64,6 +64,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import logging
+import time
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Sequence, Set, Tuple)
 
@@ -110,6 +111,40 @@ class CompressConfig:
     every mode; an explicit ``scan_collect=False`` keeps the loop path,
     which ignores the mesh.  A degenerate mesh (DP degree 1) is treated as
     ``None``; a microbatch count not divisible by dp collects unfolded.
+
+    Stage-2 block refinement (``core.refine``) is governed by the
+    ``refine_*`` knobs:
+
+      * ``refine_epochs`` / ``refine_lr`` / ``refine_weight_decay`` /
+        ``refine_warmup_frac`` — AdamW + cosine-schedule hyperparameters
+        (paper defaults: 25 epochs, lr 1e-4, no decay, 10% warmup).
+      * ``refine_scan`` — dispatch strategy for the refinement engine.
+        ``True`` runs each unit's whole ``epochs × microbatches`` schedule
+        as one jitted ``lax.scan`` with the (params, optimizer) pair as a
+        donated carry and the per-step losses returned as a single stacked
+        array (one host transfer per unit); ``False`` keeps the seed
+        per-step loop (one dispatch + one blocking ``float(loss)`` per
+        step), which ignores the mesh — the same contract as
+        ``scan_collect=False``.  ``None`` (default) mirrors
+        ``scan_collect``'s auto rule:
+        scan unless ``calib_mode="sequential"`` without a mesh (the
+        seed-trajectory parity default; the scan path matches the loop to
+        fp32 tolerance, not bitwise).
+      * ``refine_target_mse`` — early-stop plateau: refinement of a unit
+        stops after the first epoch whose mean loss is at or below this
+        value (0 = run all epochs).  Scan and loop paths stop after the
+        same epoch.
+
+    Under ``calib_mesh``, refinement runs data-parallel too: the stacked
+    shifted-input/anchor streams keep their ``calib_stream_spec`` batch
+    sharding while the param/optimizer carry is constrained replicated, so
+    each step lowers to per-worker grads + one psum.  Microbatches are
+    never folded (SGD steps are sequential — the stage-1 never-fold rule
+    applies to the whole schedule here), so refined params match the
+    unsharded run to fp32 tolerance for every unit, expert banks included.
+    Refinement anchors stay in the stream dtype and placement (the loss
+    upcasts to fp32 internally), so fp32 anchor copies no longer double
+    stream memory under a mesh.
     """
 
     ratio: float = 0.8
@@ -117,6 +152,11 @@ class CompressConfig:
     refine: bool = True
     refine_epochs: int = 25
     refine_lr: float = 1e-4
+    refine_weight_decay: float = 0.0
+    refine_warmup_frac: float = 0.1
+    refine_scan: Optional[bool] = None  # scanned refinement schedule;
+    #   None = auto (scan unless calib_mode="sequential" without a mesh)
+    refine_target_mse: float = 0.0  # early-stop plateau (0 = off)
     remap: bool = False           # Dobi-style ratio accounting (App. B.4)
     eps: float = 1e-6
     whiten: str = "eigh"          # eigh | cholesky
@@ -455,6 +495,11 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     scan = ccfg.scan_collect
     if scan is None:
         scan = ccfg.calib_mode != "sequential" or mesh is not None
+    # the refinement engine mirrors the same auto rule: scanned dispatch
+    # unless the run is pinned to the sequential seed-parity trajectory
+    refine_scan = ccfg.refine_scan
+    if refine_scan is None:
+        refine_scan = ccfg.calib_mode != "sequential" or mesh is not None
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
     units = unroll_units(params, cfg)
     report: Dict[str, Any] = {
@@ -585,27 +630,46 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         unit_report["replay_taps"] = replayed
 
         # ---- stage 2: block-level refinement --------------------------------
+        # anchors stay in the STREAM dtype/placement (the refinement loss
+        # upcasts to fp32 internally), so no fp32 copy of the whole stream
+        # is ever materialized; under a mesh they keep the DP batch sharding
         if anchors is not None:  # fused pass already ran the original block
-            y_anchor = [a.astype(jnp.float32) for a in anchors]
+            y_anchor = list(anchors)
         else:
             y_anchor = [fwd(orig_p, xs[i],
-                            None if dec_aux_o is None else dec_aux_o[i]
-                            ).astype(jnp.float32) for i in range(len(xs))]
+                            None if dec_aux_o is None else dec_aux_o[i])
+                        for i in range(len(xs))]
+        # (no placement here: the scanned refinement path re-stacks and
+        # places the anchors itself, and stream propagation below re-commits
+        # the DP layout — an eager per-microbatch device_put would be paid
+        # and then discarded on the default path)
         if ccfg.refine:
             xp_b = [(xps[i], None if dec_aux_c is None else dec_aux_c[i])
                     for i in range(len(xps))]
+            # fwd is passed DIRECTLY (memoized per (kind, cfg, seq_len)):
+            # a fresh lambda per unit would defeat the refinement engine's
+            # per-apply-fn jit memoization and retrace every unit
+            t0 = time.perf_counter()
             cur_p, hist = RF.refine_unit(
-                lambda p, xp, aux: fwd(p, xp, aux),
-                cur_p, xp_b, y_anchor,
-                epochs=ccfg.refine_epochs, lr=ccfg.refine_lr)
+                fwd, cur_p, xp_b, y_anchor,
+                epochs=ccfg.refine_epochs, lr=ccfg.refine_lr,
+                warmup_frac=ccfg.refine_warmup_frac,
+                weight_decay=ccfg.refine_weight_decay,
+                target_mse=ccfg.refine_target_mse,
+                scan=refine_scan, mesh=mesh)
             unit_report.update(pre_refine_mse=hist["pre_refine_mse"],
-                               post_refine_mse=hist["post_refine_mse"])
+                               post_refine_mse=hist["post_refine_mse"],
+                               refine_steps=hist["steps"],
+                               refine_mode=hist["mode"],
+                               refine_dispatches=hist["dispatches"],
+                               refine_wall=time.perf_counter() - t0)
         else:
             mse = float(sum(
                 jnp.mean(jnp.square(
                     fwd(cur_p, xps[i],
                         None if dec_aux_c is None else dec_aux_c[i]
-                        ).astype(jnp.float32) - y_anchor[i]))
+                        ).astype(jnp.float32)
+                    - y_anchor[i].astype(jnp.float32)))
                 for i in range(len(xps))) / len(xps))
             unit_report["pre_refine_mse"] = mse
 
@@ -641,6 +705,13 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         # counts above covered calib_dp microbatches at once (per-device
         # forwards = the counts as reported)
         "calib_dp": 1 if mesh is None else SH.dp_degree(mesh),
+    }
+    refined = [u for u in report["units"] if "refine_wall" in u]
+    report["refinement"] = {
+        "scan": bool(refine_scan) if ccfg.refine else None,
+        "steps": sum(u["refine_steps"] for u in refined),
+        "dispatches": sum(u["refine_dispatches"] for u in refined),
+        "wall": sum(u["refine_wall"] for u in refined),
     }
     new_params = restack_units(params, cfg, units)
     return new_params, report

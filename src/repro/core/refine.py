@@ -1,77 +1,325 @@
-"""Block-level local refinement (Alg. 2 step 9, App. B.2).
+"""Block-level local refinement (Alg. 2 step 9, App. B.2) — scanned engine.
 
 Jointly optimizes the factorized weights {U_j, V_j} and the block-local
 parameters θ (norm scales/biases, conv weights, SSM params, router) to
 minimize MSE(L_i(X), L'_i(X')) — the original block outputs are the anchor
 targets, the shifted inputs are what the compressed block actually sees.
-
 AdamW, lr 1e-4, cosine schedule with linear warmup, 25 epochs over the
-calibration set with batch size 32 (paper defaults; all overridable).
+calibration set (paper defaults; all overridable).
+
+The seed implementation was a Python ``epochs × microbatches`` double loop
+that host-synced ``float(loss)`` after every optimizer step and retraced
+its jits per unit.  This module mirrors the streaming-calibration
+architecture (``core.streaming``):
+
+* **Scanned dispatch** (``scan=True``, the engine default): ONE jitted
+  ``lax.scan`` over the flattened ``epochs × microbatches`` schedule — an
+  outer scan over epochs wrapping an inner scan over the stacked microbatch
+  streams, so the stream is stored once and never tiled.  The
+  ``(params, AdamW state)`` pair is the scan carry — XLA aliases its
+  buffers in place across steps, and the AdamW state is additionally
+  donated at the jit boundary (``streaming.carry_donation``; the params
+  input is not: its uncompressed leaves alias the driver's trees, see
+  ``_refine_fns``).  Per-step losses come back as one stacked
+  ``(epochs, B)`` array — a single host transfer per unit instead of
+  ``epochs·B`` blocking ``float()`` syncs.  A ragged tail (calibration size
+  not divisible by the microbatch) drops to one scanned dispatch per epoch
+  over the uniform prefix plus a per-microbatch loop for the remainder,
+  preserving the exact step order.
+* **Memoized step functions**: all jitted fns are built by ``_refine_fns``,
+  ``lru_cache``d per (apply_fn, optimizer cfg, schedule, shapes key) — the
+  same pattern as ``pipeline.make_unit_apply`` / ``streaming._sweep_fn`` —
+  so every same-kind unit shares one trace cache instead of recompiling the
+  identical step per unit.  Callers must pass a *stable* ``apply_fn`` (the
+  memoized ``make_unit_apply`` output, not a fresh lambda per unit).
+* **Mesh-aware** (``mesh=``, threaded from ``CompressConfig.calib_mesh``):
+  the stacked shifted-input/anchor streams keep their
+  ``distributed.sharding.calib_stream_spec`` batch sharding — each step's
+  microbatch dim shards over the data axes — while the param/optimizer
+  carry is constrained replicated (``sharding.refine_carry_constraint``),
+  which GSPMD lowers to per-worker grads + one psum per step.  Refinement
+  never folds microbatches (SGD steps are sequential: folding would change
+  the optimization trajectory), so — like stage 1's never-fold rule for
+  expert banks — DP sharding changes placement, never semantics: refined
+  params match the unsharded run to fp32 tolerance.
+* **Early stop** (``target_mse``): after any epoch whose mean loss is at or
+  below the target, remaining epochs are skipped — a real ``break`` on the
+  loop path, a ``lax.cond`` that freezes the carry on the scan path (both
+  stop after the same epoch, so refined params agree across paths).
+
+``scan=False`` keeps the seed per-step loop (bit-for-bit the seed
+trajectory at ``target_mse=0``) as the parity reference, same contract as
+``CompressConfig.scan_collect``; the scan path matches it to fp32
+tolerance (same GEMMs, different fusion).
 """
 
 from __future__ import annotations
 
+import functools
 import logging
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import streaming as S
+from repro.distributed import sharding as SH
 from repro.optim import adamw
 
 LOG = logging.getLogger(__name__)
 
 
+class _RefineFns(NamedTuple):
+    """Jitted entry points for one (apply_fn, schedule, shapes) key.
+
+    ``run_all``   — the full scanned schedule: epochs × B steps, donated
+                    (params, opt) carry, stacked (epochs, B) losses (+ a
+                    per-epoch skipped mask when early stop is armed).
+    ``run_epoch`` — one scanned epoch over the uniform prefix (the
+                    ragged-tail fallback threads the carry through Python
+                    between epochs).
+    ``step1``     — single optimizer step (the loop/tail path).
+    ``eval_scan`` — per-microbatch losses of the stacked prefix, one
+                    dispatch.
+    ``eval1``     — single-microbatch loss (loop/tail path).
+    """
+
+    run_all: Callable
+    run_epoch: Callable
+    step1: Callable
+    eval_scan: Callable
+    eval1: Callable
+
+
+@functools.lru_cache(maxsize=64)
+def _refine_fns(apply_fn: Callable, ocfg: adamw.AdamWConfig, epochs: int,
+                total_steps: int, warmup_steps: int, have_aux: bool,
+                target_mse: float, backend: str, mesh) -> _RefineFns:
+    """Memoized per (unit apply fn, optimizer/schedule config, aux arity,
+    early-stop target, backend, mesh).  ``apply_fn`` itself is memoized per
+    (kind, cfg, seq_len) — see ``pipeline.make_unit_apply`` — so every
+    same-kind unit resolves to the SAME key and reuses one trace cache.
+
+    ``backend`` keys the carry-donation decision per backend (never baked
+    into the first trace a process takes); ``mesh`` (hashable Mesh or None)
+    keys the replicated-carry constraint so sharded and unsharded traces
+    live in separate cache entries."""
+    sched = adamw.cosine_schedule(1.0, total_steps,
+                                  warmup_steps=warmup_steps)
+
+    def loss_fn(p, xp, aux, y):
+        out = apply_fn(p, xp, aux)
+        return jnp.mean(jnp.square(out.astype(jnp.float32)
+                                   - y.astype(jnp.float32)))
+
+    def unpack(mb):
+        if have_aux:
+            return mb
+        xp, y = mb
+        return xp, None, y
+
+    def step(carry, mb):
+        p, opt = carry
+        if mesh is not None:
+            # every DP worker holds the same weights/moments; grads over the
+            # stream-sharded microbatch psum into the replicated carry
+            p = SH.refine_carry_constraint(p, mesh)
+            opt = SH.refine_carry_constraint(opt, mesh)
+        xp, aux, y = unpack(mb)
+        loss, grads = jax.value_and_grad(loss_fn)(p, xp, aux, y)
+        p, opt, _ = adamw.update_with_schedule(grads, opt, p, ocfg, sched)
+        return (p, opt), loss
+
+    def sweep_epoch(p, opt, batches):
+        (p, opt), losses = jax.lax.scan(step, (p, opt), batches)
+        return (p, opt), losses
+
+    if target_mse > 0.0:
+        # early stop rides the scan: once an epoch's mean loss reaches the
+        # target, later epochs cond-skip the whole inner scan (the carry is
+        # frozen, so scan and loop stop after the same epoch)
+        def run_all(p, opt, batches):
+            n_b = jax.tree.leaves(batches)[0].shape[0]
+
+            def epoch_body(carry, _):
+                p, opt, done = carry
+                (p, opt), losses = jax.lax.cond(
+                    done,
+                    lambda p, opt: ((p, opt), jnp.zeros((n_b,),
+                                                        jnp.float32)),
+                    lambda p, opt: sweep_epoch(p, opt, batches),
+                    p, opt)
+                new_done = done | (jnp.mean(losses) <= target_mse)
+                return (p, opt, new_done), (losses, done)
+
+            carry = (p, opt, jnp.zeros((), jnp.bool_))
+            (p, opt, _), (losses, skipped) = jax.lax.scan(
+                epoch_body, carry, None, length=epochs)
+            return (p, opt), losses, skipped
+    else:
+        def run_all(p, opt, batches):
+            def epoch_body(carry, _):
+                p, opt = carry
+                return sweep_epoch(p, opt, batches)
+            (p, opt), losses = jax.lax.scan(epoch_body, (p, opt), None,
+                                            length=epochs)
+            return (p, opt), losses, None
+
+    def eval_scan(p, batches):
+        def body(c, mb):
+            xp, aux, y = unpack(mb)
+            return c, loss_fn(p, xp, aux, y)
+        return jax.lax.scan(body, 0.0, batches)[1]
+
+    def step1(p, opt, xp, aux, y):
+        (p, opt), loss = step((p, opt), (xp, aux, y) if have_aux
+                              else (xp, y))
+        return p, opt, loss
+
+    # Only the AdamW state is donated at the jit boundary: it is created
+    # inside refine_unit and never aliased, while the params tree SHARES
+    # its uncompressed leaves (norm scales, SSM params, ...) with the
+    # driver's orig_p / model tree (pipeline._clone is an identity
+    # tree.map), so donating it would invalidate buffers the caller still
+    # reads (e.g. shared-unit reuse sites).  Within the scan, XLA's carry
+    # aliasing already reuses the param buffers in place across steps —
+    # input donation would only have saved the initial copy.
+    donate = S.carry_donation(backend, 1)
+    return _RefineFns(
+        run_all=jax.jit(run_all, donate_argnums=donate),
+        run_epoch=jax.jit(sweep_epoch, donate_argnums=donate),
+        step1=jax.jit(step1, donate_argnums=donate),
+        eval_scan=jax.jit(eval_scan),
+        eval1=jax.jit(loss_fn),
+    )
+
+
 def refine_unit(apply_fn: Callable, params, xp_batches: Sequence,
                 y_batches: Sequence, *, epochs: int = 25, lr: float = 1e-4,
                 warmup_frac: float = 0.1, weight_decay: float = 0.0,
+                target_mse: float = 0.0, scan: bool = True, mesh=None,
                 log_every: int = 0):
     """apply_fn(params, xp, aux_inputs) -> block output.
 
     xp_batches: list of (shifted_input, aux_inputs) tuples (aux_inputs may be
     None; whisper decoder passes the compressed encoder output).
-    y_batches:  list of anchor outputs L_i(X) (precomputed, fp32).
-    Returns (refined_params, history dict).
+    y_batches:  list of anchor outputs L_i(X) (any float dtype; the loss
+    upcasts to fp32 internally, so anchors can stay in the stream dtype).
+
+    ``scan`` selects the scanned single-dispatch schedule (default) or the
+    seed per-step loop (parity reference); ``mesh`` runs each step
+    data-parallel (see module docstring); ``target_mse`` stops after the
+    first epoch whose mean loss reaches the target (0 = run all epochs).
+
+    Returns (refined_params, history dict) — history carries
+    ``pre_refine_mse``/``post_refine_mse``, per-epoch ``losses``, the
+    optimizer ``steps`` actually applied, the dispatch ``mode``
+    (scan | scan+tail | loop), and ``dispatches`` (host→device calls
+    issued, the benchmarkable dispatch-reduction number).
     """
     n_batches = len(xp_batches)
     total_steps = max(1, epochs * n_batches)
+    warmup_steps = max(1, int(warmup_frac * total_steps))
     ocfg = adamw.AdamWConfig(lr=lr, weight_decay=weight_decay, grad_clip=1.0)
-    sched = adamw.cosine_schedule(1.0, total_steps,
-                                  warmup_steps=max(1, int(warmup_frac *
-                                                          total_steps)))
-    state = adamw.init(params)
+    # the loop path IGNORES the mesh (no carry constraints, no stream
+    # restriping) — same contract as stage 1's scan_collect=False: the
+    # seed-trajectory parity reference must not pick up DP reductions.
+    # A degenerate mesh (DP degree 1) is treated as None.
+    mesh = mesh if (scan and mesh is not None
+                    and SH.dp_degree(mesh) > 1) else None
 
-    def loss_fn(p, xp, aux, y):
-        out = apply_fn(p, xp, aux)
-        return jnp.mean(jnp.square(out.astype(jnp.float32) - y))
+    xs = [xp for xp, _ in xp_batches]
+    auxs = [aux for _, aux in xp_batches]
+    have_aux = auxs[0] is not None
+    if not have_aux:
+        auxs = None
 
-    @jax.jit
-    def step(p, state, xp, aux, y):
-        loss, grads = jax.value_and_grad(loss_fn)(p, xp, aux, y)
-        lr_scale = sched(state.step)
-        p, state, _ = adamw.update(grads, state, p, ocfg, lr_scale)
-        return p, state, loss
+    n_uni = S.uniform_prefix(xs, auxs, y_batches) if scan else 0
+    fns = _refine_fns(apply_fn, ocfg, epochs, total_steps, warmup_steps,
+                      have_aux, float(target_mse), jax.default_backend(),
+                      mesh)
+    history = {"dispatches": 0}
 
-    @jax.jit
-    def eval_loss(p, xp, aux, y):
-        return loss_fn(p, xp, aux, y)
+    batches = None
+    if n_uni >= 1:
+        # stacked uniform prefix, placed so each step's microbatch dim
+        # shards over the mesh's data axes (calib_stream_spec; no folding)
+        stacked = [S.stack_stream(xs, n_uni, mesh=mesh)]
+        if have_aux:
+            stacked.append(S.stack_stream(auxs, n_uni, mesh=mesh))
+        stacked.append(S.stack_stream(y_batches, n_uni, mesh=mesh))
+        batches = tuple(stacked)
 
     def mean_loss(p):
         tot = 0.0
-        for (xp, aux), y in zip(xp_batches, y_batches):
-            tot += float(eval_loss(p, xp, aux, y))
+        if batches is not None:
+            history["dispatches"] += 1
+            tot += float(jnp.sum(fns.eval_scan(p, batches)))
+        start = n_uni if batches is not None else 0
+        for i in range(start, n_batches):
+            history["dispatches"] += 1
+            tot += float(fns.eval1(p, xs[i],
+                                   None if auxs is None else auxs[i],
+                                   y_batches[i]))
         return tot / n_batches
 
     pre = mean_loss(params)
-    history = {"pre_refine_mse": pre, "losses": []}
-    for epoch in range(epochs):
-        ep_loss = 0.0
-        for (xp, aux), y in zip(xp_batches, y_batches):
-            params, state, loss = step(params, state, xp, aux, y)
-            ep_loss += float(loss)
-        history["losses"].append(ep_loss / n_batches)
-        if log_every and (epoch + 1) % log_every == 0:
-            LOG.info("refine epoch %d/%d: mse %.3e",
-                     epoch + 1, epochs, ep_loss / n_batches)
+    history["pre_refine_mse"] = pre
+    state = adamw.init(params)
+    if mesh is not None:
+        # the carry starts (and by constraint stays) replicated
+        params = jax.device_put(params, SH.replicated(mesh))
+        state = jax.device_put(state, SH.replicated(mesh))
+
+    if scan and n_uni == n_batches:
+        # ---- full scanned schedule: one dispatch, one loss transfer ------
+        history["mode"] = "scan"
+        history["dispatches"] += 1
+        (params, state), losses, skipped = fns.run_all(params, state,
+                                                       batches)
+        losses = jax.device_get(losses)          # (epochs, B), one transfer
+        epochs_run = epochs
+        if skipped is not None:
+            epochs_run = int((~jax.device_get(skipped)).sum())
+        history["losses"] = [float(row.mean())
+                             for row in losses[:epochs_run]]
+        history["steps"] = epochs_run * n_batches
+    else:
+        # ---- per-epoch Python loop, two flavors sharing one body:
+        # "scan+tail" (ragged calibration split) scans the uniform prefix
+        # in one dispatch per epoch and loops only the remainder;
+        # "loop" (scan=False, the seed parity reference) has no prefix and
+        # steps every microbatch individually.  Exact step order either way.
+        use_prefix = batches is not None     # only built on the scan path
+        history["mode"] = "scan+tail" if use_prefix else "loop"
+        history["losses"] = []
+        history["steps"] = 0
+        tail_start = n_uni if use_prefix else 0
+        for epoch in range(epochs):
+            ep_loss = 0.0
+            if use_prefix:
+                history["dispatches"] += 1
+                (params, state), losses = fns.run_epoch(params, state,
+                                                        batches)
+                ep_loss += float(jnp.sum(losses))
+            for i in range(tail_start, n_batches):
+                history["dispatches"] += 1
+                params, state, loss = fns.step1(
+                    params, state, xs[i],
+                    None if auxs is None else auxs[i], y_batches[i])
+                ep_loss += float(loss)
+            history["losses"].append(ep_loss / n_batches)
+            history["steps"] += n_batches
+            if log_every and (epoch + 1) % log_every == 0:
+                LOG.info("refine epoch %d/%d: mse %.3e", epoch + 1, epochs,
+                         history["losses"][-1])
+            if target_mse > 0.0 and history["losses"][-1] <= target_mse:
+                break
+    if log_every and history["mode"] == "scan":
+        for epoch in range(log_every - 1, len(history["losses"]),
+                           log_every):
+            LOG.info("refine epoch %d/%d: mse %.3e", epoch + 1, epochs,
+                     history["losses"][epoch])
+
     history["post_refine_mse"] = mean_loss(params)
     return params, history

@@ -87,6 +87,54 @@ Spec = Tuple[str, str, bool]
 Groups = Sequence[Tuple[str, Sequence[Spec]]]
 
 
+# ---------------------------------------------------------------------------
+# shared scan-engine helpers (stage-1 collection AND stage-2 refinement,
+# core.refine, build their scanned dispatch on these)
+
+
+def carry_donation(backend: str, *argnums: int) -> Tuple[int, ...]:
+    """Donation argnums for a jitted scan sweep's carry: accelerators alias
+    the carry buffers in place, CPU jit cannot donate (donating there only
+    emits warnings).  Keyed on the *backend string* so the decision is made
+    per backend, never baked into the first trace a process happens to
+    take."""
+    return argnums if backend != "cpu" else ()
+
+
+def uniform_prefix(*streams: Optional[Sequence]) -> int:
+    """Length of the leading run of microbatches whose shapes match the
+    first microbatch across EVERY provided stream (``None`` streams are
+    skipped).  The ragged tail of an uneven calibration split cannot stack
+    onto a scanned batch axis — aux streams (whisper encoder outputs) ride
+    the same scan, so a ragged aux microbatch must break the prefix too."""
+    live = [s for s in streams if s is not None]
+    n = len(live[0])
+    for i in range(1, n):
+        if any(s[i].shape != s[0].shape for s in live):
+            return i
+    return n
+
+
+def stack_stream(seq: Sequence, n: int, *, mesh=None,
+                 fold: int = 1) -> jnp.ndarray:
+    """Stack one stream's uniform microbatch prefix onto a scan axis.
+
+    ``fold > 1`` (data-parallel collection) merges ``fold`` consecutive
+    microbatches onto each scan step — ``(n, mb, ...)`` becomes
+    ``(n/fold, fold·mb, ...)`` — so shard w of step s is exactly microbatch
+    ``s·fold + w``.  Under ``mesh`` the per-step batch dim is placed with
+    ``distributed.sharding.calib_stream_spec`` over the mesh's data axes
+    (fold=1 keeps the microbatch schedule and merely shards each step's
+    sequences — the refinement-engine placement, where SGD steps are
+    sequential and folding would change the optimization trajectory)."""
+    out = jnp.stack(seq[:n])
+    if fold > 1:
+        out = out.reshape((n // fold, fold * out.shape[1]) + out.shape[2:])
+    if mesh is not None:
+        out = jax.device_put(out, SH.calib_stream_sharding(out, mesh))
+    return out
+
+
 @functools.lru_cache(maxsize=64)
 def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
               keep_orig_outputs: bool, backend: str, mesh):
@@ -117,8 +165,7 @@ def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
         return jax.lax.scan(step, covs, batch)
 
     # donate the accumulator carry where the backend can alias it in place
-    donate = (0,) if backend != "cpu" else ()
-    return jax.jit(sweep, donate_argnums=donate)
+    return jax.jit(sweep, donate_argnums=carry_donation(backend, 0))
 
 
 @dataclasses.dataclass
@@ -269,28 +316,15 @@ class CalibrationEngine:
         key = (role, n, fold)
         hit = self._stack_cache.get(key)
         if hit is None:
-            hit = jnp.stack(seq[:n])
-            if fold > 1:
-                hit = hit.reshape((n // fold, fold * hit.shape[1])
-                                  + hit.shape[2:])
-                hit = jax.device_put(
-                    hit, SH.calib_stream_sharding(hit, self.mesh))
+            hit = stack_stream(seq, n, fold=fold,
+                               mesh=self.mesh if fold > 1 else None)
             self._stack_cache[key] = hit
         return hit
 
     def _collect_scan(self, fwd_taps, orig_p, cur_p, xs, xps, aux_o, aux_c,
                       *, only=None, keep_orig_outputs=False):
         taps = [t for t in self._spec if only is None or t in only]
-        # uniform-shape prefix over EVERY scanned stream (the ragged tail of
-        # an uneven calibration split cannot stack into a scanned batch
-        # axis) — aux streams (whisper encoder outputs) ride the same scan,
-        # so a ragged aux microbatch must break the prefix too
-        streams = [s for s in (xs, xps, aux_o, aux_c) if s is not None]
-        n_uni = len(xs)
-        for i in range(1, len(xs)):
-            if any(s[i].shape != s[0].shape for s in streams):
-                n_uni = i
-                break
+        n_uni = uniform_prefix(xs, xps, aux_o, aux_c)
         ys: Optional[List] = [] if keep_orig_outputs else None
         if n_uni >= 1 and (taps or keep_orig_outputs):
             # data-parallel: fold dp microbatches per scan step so each DP

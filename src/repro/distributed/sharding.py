@@ -354,6 +354,33 @@ def replicated(mesh: Mesh) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# refinement-engine rules (sharded stage-2, core.refine)
+#
+# The scanned refinement sweep threads a (params, AdamW state) carry through
+# every optimizer step while the shifted-input/anchor streams keep the
+# ``calib_stream_spec`` batch sharding (each step's microbatch dim shards
+# over the data axes — no folding: SGD steps are sequential, so DP splits
+# each step's *sequences*, never merges steps).  The carry is replicated:
+# every worker holds the same weights and moments, and GSPMD lowers the
+# value_and_grad over the sharded microbatch to per-worker grads + one psum
+# per step.
+
+
+def refine_carry_constraint(tree: PyTree, mesh: Optional[Mesh]) -> PyTree:
+    """Refinement (params, optimizer) carry: fully replicated, mirroring
+    ``cov_spec`` — the refined weights must be independent of which worker
+    held which sequences.  Constrains every carry leaf inside the scanned
+    step (the jit-internal counterpart of placing the carry with
+    ``replicated``); no-op without a mesh so the unsharded trace stays
+    constraint-free."""
+    if mesh is None:
+        return tree
+    sh = replicated(mesh)
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, sh), tree)
+
+
+# ---------------------------------------------------------------------------
 # active-mesh hints: lets model internals place sharding constraints without
 # threading the mesh through every call.  The launch layer activates the mesh
 # around step-function *tracing*; with no active mesh, hints are no-ops (CPU

@@ -73,6 +73,18 @@ def update(grads: PyTree, state: AdamWState, params: PyTree,
     return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}
 
 
+def update_with_schedule(grads: PyTree, state: AdamWState, params: PyTree,
+                         cfg: AdamWConfig, sched: Callable):
+    """Scan-carry update path: the lr multiplier comes from the CARRIED step
+    counter (``sched(state.step)``), so a jitted ``lax.scan`` body can thread
+    a donated ``(params, state)`` pair without hosting any per-step schedule
+    bookkeeping — the whole optimization trajectory lowers to one dispatch.
+    Numerically identical to ``update(grads, state, params, cfg,
+    sched(state.step))``; the seed per-step loop and the scanned refinement
+    engine share this exact arithmetic."""
+    return update(grads, state, params, cfg, sched(state.step))
+
+
 def cosine_schedule(base_lr: float, total_steps: int,
                     warmup_steps: int = 0, final_frac: float = 0.0
                     ) -> Callable[[jnp.ndarray], jnp.ndarray]:

@@ -1,0 +1,271 @@
+"""Scanned refinement engine: scan-vs-loop parity, memoization, early stop.
+
+The engine's contract (ISSUE 4, mirroring the stage-1 ``scan_collect``
+contract locked in tests/test_streaming.py):
+
+  * ``scan=True`` runs the whole ``epochs × microbatches`` schedule as ONE
+    jitted ``lax.scan`` dispatch per unit (plus one eval dispatch per
+    side), returning the per-step losses as a single stacked array — no
+    per-step ``float()`` syncs;
+  * ``scan=False`` is the seed per-step loop, kept as the parity
+    reference — the scan path matches its refined params and loss history
+    to fp32 tolerance (same GEMMs, different fusion), ragged tails and
+    early stop included;
+  * the jitted step/eval functions are memoized per (apply_fn, optimizer
+    config, schedule, shapes), so same-kind units never retrace.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import CompressConfig, compress_model
+from repro.core import pipeline as P
+from repro.core import refine as RF
+from repro.data import calibration_set
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _problem(n_batches=3, rows=16, n=8, key=KEY):
+    """Tiny linear-regression refinement problem: recover w_true from a
+    perturbed start.  Returns (apply_fn, params, xp_batches, y_batches)."""
+    w_true = jax.random.normal(key, (n, n))
+    xs = [(jax.random.normal(jax.random.PRNGKey(i), (rows, n)), None)
+          for i in range(n_batches)]
+    ys = [x @ w_true for x, _ in xs]
+    params = {"w": w_true + 0.3 * jax.random.normal(key, (n, n))}
+
+    def apply_fn(p, x, aux):
+        return x @ p["w"]
+
+    return apply_fn, params, xs, ys
+
+
+def _assert_history_close(ha, hb):
+    assert len(ha["losses"]) == len(hb["losses"])
+    np.testing.assert_allclose(ha["losses"], hb["losses"],
+                               rtol=2e-4, atol=1e-7)
+    for k in ("pre_refine_mse", "post_refine_mse"):
+        np.testing.assert_allclose(ha[k], hb[k], rtol=2e-4, atol=1e-7)
+    assert ha["steps"] == hb["steps"]
+
+
+class TestScanVsLoop:
+    def test_params_and_history_match_fp32(self):
+        fn, params, xs, ys = _problem()
+        out_s, h_s = RF.refine_unit(fn, dict(params), xs, ys, epochs=12,
+                                    lr=1e-2, scan=True)
+        out_l, h_l = RF.refine_unit(fn, dict(params), xs, ys, epochs=12,
+                                    lr=1e-2, scan=False)
+        assert h_s["mode"] == "scan" and h_l["mode"] == "loop"
+        np.testing.assert_allclose(np.asarray(out_s["w"]),
+                                   np.asarray(out_l["w"]),
+                                   rtol=2e-5, atol=2e-5)
+        _assert_history_close(h_s, h_l)
+
+    def test_scan_is_one_dispatch_per_schedule(self):
+        """The whole epochs×B optimization is 1 dispatch; pre/post eval add
+        one each.  The loop path pays epochs·B steps + 2·B evals."""
+        fn, params, xs, ys = _problem(n_batches=4)
+        _, h_s = RF.refine_unit(fn, dict(params), xs, ys, epochs=10,
+                                lr=1e-2, scan=True)
+        _, h_l = RF.refine_unit(fn, dict(params), xs, ys, epochs=10,
+                                lr=1e-2, scan=False)
+        assert h_s["dispatches"] == 3          # run_all + pre/post eval
+        assert h_l["dispatches"] == 10 * 4 + 2 * 4
+        assert h_s["steps"] == h_l["steps"] == 40
+
+    def test_ragged_tail_falls_back_per_epoch(self):
+        """A ragged last microbatch scans the uniform prefix once per epoch
+        and loops the tail — exact step order, fp32-equal result."""
+        fn, params, xs, ys = _problem()
+        xs = xs + [(jax.random.normal(jax.random.PRNGKey(9), (7, 8)), None)]
+        ys = ys + [xs[-1][0] @ (params["w"] * 0)]  # any anchor shape works
+        out_s, h_s = RF.refine_unit(fn, dict(params), xs, ys, epochs=6,
+                                    lr=1e-2, scan=True)
+        out_l, h_l = RF.refine_unit(fn, dict(params), xs, ys, epochs=6,
+                                    lr=1e-2, scan=False)
+        assert h_s["mode"] == "scan+tail"
+        # per epoch: 1 scanned prefix + 1 tail step; + 2×2 eval dispatches
+        assert h_s["dispatches"] == 6 * 2 + 4
+        np.testing.assert_allclose(np.asarray(out_s["w"]),
+                                   np.asarray(out_l["w"]),
+                                   rtol=2e-5, atol=2e-5)
+        _assert_history_close(h_s, h_l)
+
+    def test_aux_stream_rides_the_scan(self):
+        """Aux inputs (whisper encoder stream) stack onto the same scan."""
+        w = jax.random.normal(KEY, (8, 8))
+        xs = [(jax.random.normal(jax.random.PRNGKey(i), (16, 8)),
+               jax.random.normal(jax.random.PRNGKey(100 + i), (4, 8)))
+              for i in range(3)]
+        ys = [x @ w + aux.mean() for x, aux in xs]
+        params = {"w": w + 0.2 * jax.random.normal(KEY, (8, 8))}
+
+        def fn(p, x, aux):
+            return x @ p["w"] + aux.mean()
+
+        out_s, h_s = RF.refine_unit(fn, dict(params), xs, ys, epochs=8,
+                                    lr=1e-2, scan=True)
+        out_l, h_l = RF.refine_unit(fn, dict(params), xs, ys, epochs=8,
+                                    lr=1e-2, scan=False)
+        assert h_s["mode"] == "scan" and h_s["dispatches"] == 3
+        np.testing.assert_allclose(np.asarray(out_s["w"]),
+                                   np.asarray(out_l["w"]),
+                                   rtol=2e-5, atol=2e-5)
+        _assert_history_close(h_s, h_l)
+
+
+class TestEarlyStop:
+    def test_target_mse_stops_both_paths_at_same_epoch(self):
+        fn, params, xs, ys = _problem()
+        _, h_full = RF.refine_unit(fn, dict(params), xs, ys, epochs=20,
+                                   lr=1e-2, scan=True)
+        # a target strictly between two epoch means is robust to the fp32
+        # summation-order difference between the paths
+        target = 0.5 * (h_full["losses"][4] + h_full["losses"][5])
+        out_s, h_s = RF.refine_unit(fn, dict(params), xs, ys, epochs=20,
+                                    lr=1e-2, scan=True, target_mse=target)
+        out_l, h_l = RF.refine_unit(fn, dict(params), xs, ys, epochs=20,
+                                    lr=1e-2, scan=False, target_mse=target)
+        assert h_s["steps"] == h_l["steps"] == 6 * len(xs)
+        assert len(h_s["losses"]) == len(h_l["losses"]) == 6
+        np.testing.assert_allclose(np.asarray(out_s["w"]),
+                                   np.asarray(out_l["w"]),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_zero_target_runs_all_epochs(self):
+        fn, params, xs, ys = _problem()
+        _, h = RF.refine_unit(fn, dict(params), xs, ys, epochs=7, lr=1e-2,
+                              scan=True, target_mse=0.0)
+        assert h["steps"] == 7 * len(xs)
+        assert len(h["losses"]) == 7
+
+
+class TestMemoization:
+    def test_same_apply_fn_shares_traces_across_units(self):
+        """Two same-shape units refined with the SAME apply fn (the
+        memoized ``make_unit_apply`` contract) must not retrace: the
+        engine's jitted fns are lru-cached per (apply_fn, config, shapes),
+        like the stage-1 sweep fns."""
+        traces = {"n": 0}
+
+        def apply_fn(p, x, aux):
+            traces["n"] += 1
+            return x @ p["w"]
+
+        _, params, xs, ys = _problem()
+        for scan in (True, False):
+            RF.refine_unit(apply_fn, dict(params), xs, ys, epochs=2,
+                           lr=1e-2, scan=scan)
+        after_first = traces["n"]
+        assert after_first > 0
+        hits0 = RF._refine_fns.cache_info().hits
+        # a different unit, same kind/shapes/config -> zero new traces
+        params2 = {"w": jax.random.normal(jax.random.PRNGKey(7), (8, 8))}
+        for scan in (True, False):
+            RF.refine_unit(apply_fn, dict(params2), xs, ys, epochs=2,
+                           lr=1e-2, scan=scan)
+        assert traces["n"] == after_first
+        assert RF._refine_fns.cache_info().hits > hits0
+
+    def test_pipeline_passes_memoized_apply_fn(self, monkeypatch):
+        """The driver must hand ``refine_unit`` the memoized per-kind apply
+        fn directly — a fresh ``lambda`` per unit would defeat the
+        (apply_fn, ...) memoization key and retrace every unit — and
+        thread every ``refine_*`` knob from the config."""
+        cfg = get_smoke_config("llama-7b").replace(dtype="float32")
+        params = M.init_params(cfg, KEY)
+        calib = calibration_set(cfg, 4, 16)
+        seen = []
+
+        def spy(apply_fn, p, xp_b, y_b, **kw):
+            seen.append((apply_fn, kw))
+            return p, {"pre_refine_mse": 0.0, "post_refine_mse": 0.0,
+                       "losses": [], "steps": 0, "mode": "scan",
+                       "dispatches": 0}
+
+        monkeypatch.setattr(RF, "refine_unit", spy)
+        compress_model(params, cfg, calib,
+                       CompressConfig(ratio=0.6, rank_multiple=1,
+                                      microbatch=4, refine_epochs=2,
+                                      refine_lr=3e-4,
+                                      refine_weight_decay=0.01,
+                                      refine_warmup_frac=0.25,
+                                      refine_target_mse=1e-9,
+                                      refine_scan=True))
+        assert len(seen) >= 2
+        fns = {id(fn) for fn, _ in seen}
+        assert len(fns) == 1  # same-kind units share ONE apply fn object
+        seq_len = 16
+        kinds = {u.kind for u in P.unroll_units(params, cfg)}
+        legit = {id(P.make_unit_apply(k, cfg, seq_len, want_taps=False))
+                 for k in kinds}
+        assert fns <= legit
+        for _, kw in seen:
+            assert kw["epochs"] == 2
+            assert kw["lr"] == 3e-4
+            assert kw["weight_decay"] == 0.01
+            assert kw["warmup_frac"] == 0.25
+            assert kw["target_mse"] == 1e-9
+            assert kw["scan"] is True
+            assert kw["mesh"] is None
+
+
+class TestPipelineIntegration:
+    @pytest.fixture(scope="class")
+    def runs(self):
+        cfg = get_smoke_config("llama-7b").replace(dtype="float32")
+        params = M.init_params(cfg, KEY)
+        calib = calibration_set(cfg, 8, 16)
+        out = {}
+        for scan in (True, False):
+            out[scan] = compress_model(
+                params, cfg, calib,
+                CompressConfig(ratio=0.6, rank_multiple=1, microbatch=4,
+                               refine_epochs=3, calib_mode="fused",
+                               scan_collect=False, refine_scan=scan))
+        return out
+
+    def test_scan_and_loop_refinement_agree(self, runs):
+        ls, ds = jax.tree_util.tree_flatten(runs[True][0])
+        ll, dl = jax.tree_util.tree_flatten(runs[False][0])
+        assert ds == dl
+        for i, (a, b) in enumerate(zip(ls, ll)):
+            a, b = np.asarray(a), np.asarray(b)
+            np.testing.assert_allclose(
+                a, b, rtol=2e-4, atol=2e-4 * max(np.abs(b).max(), 1.0),
+                err_msg=f"leaf {i}")
+
+    def test_report_carries_refine_fields(self, runs):
+        for scan in (True, False):
+            rep = runs[scan][1]
+            units = [u for u in rep["units"] if "refine_wall" in u]
+            assert units
+            for u in units:
+                assert u["refine_mode"] == ("scan" if scan else "loop")
+                assert u["refine_steps"] == 3 * 2  # epochs × microbatches
+                assert u["refine_wall"] > 0
+                assert u["post_refine_mse"] <= u["pre_refine_mse"] * 1.05
+            agg = rep["refinement"]
+            assert agg["scan"] is scan
+            assert agg["steps"] == sum(u["refine_steps"] for u in units)
+            assert agg["dispatches"] == sum(u["refine_dispatches"]
+                                            for u in units)
+        # the dispatch-reduction tentpole: scanned stage 2 issues a small
+        # constant number of dispatches per unit, the loop path scales with
+        # epochs × microbatches
+        assert (runs[True][1]["refinement"]["dispatches"] * 3
+                <= runs[False][1]["refinement"]["dispatches"])
+
+    def test_weight_decay_changes_the_solution(self):
+        fn, params, xs, ys = _problem()
+        out0, _ = RF.refine_unit(fn, dict(params), xs, ys, epochs=5,
+                                 lr=1e-2, weight_decay=0.0)
+        out1, _ = RF.refine_unit(fn, dict(params), xs, ys, epochs=5,
+                                 lr=1e-2, weight_decay=0.1)
+        assert not np.allclose(np.asarray(out0["w"]), np.asarray(out1["w"]))
