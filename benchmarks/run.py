@@ -1,7 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  compression_quality  — Tables 1/2/5 (method × ratio × refinement PPL matrix)
+  compression_quality  — Tables 1/2/5 (method × ratio × refinement PPL
+                         matrix) + adaptive-vs-uniform rank budgets at
+                         aggressive ratios (claim_I5, ISSUE 5)
   error_evolution      — Figures 1/4 (per-depth MSE / cosine distance)
   calibration_size     — Figure 3 (quality vs calibration budget)
   refine_speed         — stage-2 scanned-dispatch claim (ISSUE 4)

@@ -40,6 +40,16 @@ def main():
                          "this many devices (0 = off; try "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                          "on CPU; the mesh also runs stage-2 refinement DP)")
+    ap.add_argument("--rank-mode", default="uniform",
+                    choices=["uniform", "adaptive"],
+                    help="rank budget policy: uniform (paper default) or "
+                         "adaptive (global water-filling over whitened-"
+                         "spectrum loss estimates — non-uniform per-layer "
+                         "ranks under the same parameter budget)")
+    ap.add_argument("--replay-taps", default=None, choices=["auto"],
+                    help="'auto' (hybrid mode): replay groups flagged by "
+                         "measured shift drift instead of the static "
+                         "expert-bank list")
     ap.add_argument("--refine-epochs", type=int, default=6,
                     help="block-refinement epochs (paper default 25; smoke "
                          "default 6)")
@@ -55,6 +65,14 @@ def main():
     if mode == "auto":
         is_moe = cfg.moe is not None and cfg.moe.num_experts
         mode = "hybrid" if is_moe else "fused"
+    if args.replay_taps == "auto" and mode != "hybrid":
+        # drift-driven replay only engages under hybrid collection — that
+        # combination IS the dense-arch story (fused drift gets replayed
+        # exactly where it is measured), so promote rather than silently
+        # ignoring the flag
+        print(f"--replay-taps auto: promoting calib mode {mode!r} -> "
+              "'hybrid' (auto-replay needs hybrid collection)")
+        mode = "hybrid"
 
     # data-parallel sharded collection: each DP worker runs the tapped
     # calibration forwards for its own microbatches
@@ -73,9 +91,17 @@ def main():
         CompressConfig(ratio=args.ratio, objective="anchored",
                        refine=not args.no_refine,
                        refine_epochs=args.refine_epochs, calib_mode=mode,
+                       rank_mode=args.rank_mode,
+                       replay_taps=args.replay_taps or (),
                        calib_mesh=calib_mesh, verbose=True))
     print(compress_ratio_report(params, compressed))
     print("calibration:", report["calibration"])
+    if args.rank_mode == "adaptive":
+        spread = [l["rank"] for u in report["units"]
+                  for l in u.get("linears", [])]
+        print(f"adaptive ranks: min {min(spread)} max {max(spread)} "
+              f"({report['calibration']['rank_mode']['rank_groups']} "
+              "rank groups)")
     if not args.no_refine:
         print("refinement:", report["refinement"])
 

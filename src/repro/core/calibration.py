@@ -70,6 +70,28 @@ def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
     return {"xx": xx, "xxp": xxp, "xpxp": xpxp, "count": count}
 
 
+def shift_drift(covs: Dict[str, jnp.ndarray]) -> float:
+    """Relative divergence of the accumulated XᵀX vs X′ᵀX′ — the per-group
+    measure of how far the shifted stream's second-order statistics have
+    drifted from the original stream's.  Zero iff the two streams were
+    identical at this tap (bit-equal activations accumulate bit-equal
+    covariances); grows with the compression error upstream of the tap.
+    Both sums cover the same token count, so the counts cancel:
+
+        D = ||XᵀX − X′ᵀX′||_F / ||XᵀX||_F
+
+    Expert banks ((E, n, n) accumulators) flatten into one norm — the
+    drift of the bank as a whole.  This is the signal behind
+    ``CompressConfig.replay_taps="auto"`` (groups whose drift exceeds the
+    threshold are re-collected sequentially) and the per-unit
+    ``shift_drift`` report field."""
+    xx = covs["xx"].astype(jnp.float32)
+    xpxp = covs["xpxp"].astype(jnp.float32)
+    num = jnp.linalg.norm((xx - xpxp).reshape(-1))
+    den = jnp.maximum(jnp.linalg.norm(xx.reshape(-1)), 1e-30)
+    return float(num / den)
+
+
 def objective_covs(covs: Dict[str, jnp.ndarray], objective: str):
     """Map accumulated covariances to the (cov_ab, cov_bb) of Thm 3.2.
 

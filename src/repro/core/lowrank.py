@@ -28,11 +28,19 @@ import jax
 import jax.numpy as jnp
 
 
+def _svd_truncate(mat: jnp.ndarray, k: int):
+    """Rank-k SVD factors of ``mat`` (m, n) plus the FULL spectrum (the
+    same decomposition serves the solve and the adaptive loss estimate):
+    returns (A (m,k), B (n,k), σ) with mat ≈ A @ B.T."""
+    u, s, vt = jnp.linalg.svd(mat.astype(jnp.float32), full_matrices=False)
+    return u[:, :k] * s[:k][None, :], vt[:k].T, s
+
+
 def eckart_young(mat: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Best rank-k factors of ``mat`` (m, n): returns (A (m,k), B (n,k)) with
     mat ≈ A @ B.T (Lemma 3.1)."""
-    u, s, vt = jnp.linalg.svd(mat.astype(jnp.float32), full_matrices=False)
-    return u[:, :k] * s[:k][None, :], vt[:k].T
+    a_fac, b_fac, _ = _svd_truncate(mat, k)
+    return a_fac, b_fac
 
 
 def _whitening_factors(s_cov: jnp.ndarray, *, eps: float, method: str):
@@ -58,6 +66,24 @@ def _whitening_factors(s_cov: jnp.ndarray, *, eps: float, method: str):
     return l_fac, l_inv_t
 
 
+def _anchored_core(w, cov_ab, cov_bb, k: int, eps: float, method: str):
+    """Shared body of the anchored solve: returns the factor pair AND the
+    full singular spectrum of M (the SVD computes it either way — the
+    adaptive estimate sweep reads the tail instead of re-running the
+    whitening + SVD a second time)."""
+    n, m = w.shape
+    k = min(k, n, m)
+    wf = w.astype(jnp.float32)
+    l_fac, l_inv_t = _whitening_factors(cov_bb.astype(jnp.float32),
+                                        eps=eps, method=method)
+    # M = W C S^{-1} L = W C L^{-T}   (since S^{-1} L = L^{-T})
+    mat = wf.T @ (cov_ab.astype(jnp.float32) @ l_inv_t)        # (m, n)
+    a_fac, b_fac, s = _svd_truncate(mat, k)                    # M ≈ A Bᵀ
+    v = l_inv_t @ b_fac                                        # (n, k)
+    u = a_fac.T                                                # (k, m)
+    return {"v": v, "u": u}, s
+
+
 @functools.partial(jax.jit, static_argnames=("k", "method"))
 def solve_anchored(w: jnp.ndarray, cov_ab: jnp.ndarray, cov_bb: jnp.ndarray,
                    k: int, *, eps: float = 1e-6,
@@ -69,26 +95,65 @@ def solve_anchored(w: jnp.ndarray, cov_ab: jnp.ndarray, cov_bb: jnp.ndarray,
     cov_bb: (n, n)  — B Bᵀ accumulated as Σ x'_rowᵀ x'_row
     Returns {"v": (n, k), "u": (k, m)} with W' = (x@v)@u.
     """
+    return _anchored_core(w, cov_ab, cov_bb, k, eps, method)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "method"))
+def solve_anchored_with_spectrum(w, cov_ab, cov_bb, k: int, *,
+                                 eps: float = 1e-6, method: str = "eigh"):
+    """The anchored solve plus the full spectrum of M — one whitening, one
+    SVD (the adaptive estimate sweep's path)."""
+    return _anchored_core(w, cov_ab, cov_bb, k, eps, method)
+
+
+def _agnostic_core(w, k: int):
     n, m = w.shape
     k = min(k, n, m)
-    wf = w.astype(jnp.float32)
-    l_fac, l_inv_t = _whitening_factors(cov_bb.astype(jnp.float32),
-                                        eps=eps, method=method)
-    # M = W C S^{-1} L = W C L^{-T}   (since S^{-1} L = L^{-T})
-    mat = wf.T @ (cov_ab.astype(jnp.float32) @ l_inv_t)        # (m, n)
-    a_fac, b_fac = eckart_young(mat, k)                        # M ≈ A Bᵀ
-    v = l_inv_t @ b_fac                                        # (n, k)
-    u = a_fac.T                                                # (k, m)
-    return {"v": v, "u": u}
+    a_fac, b_fac, s = _svd_truncate(w.astype(jnp.float32).T, k)  # W ≈ A Bᵀ
+    return {"v": b_fac, "u": a_fac.T}, s
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
 def solve_agnostic(w: jnp.ndarray, k: int) -> Dict[str, jnp.ndarray]:
     """Input-agnostic truncated SVD: min ||W − W'||_F (Eckart–Young)."""
-    n, m = w.shape
-    k = min(k, n, m)
-    a_fac, b_fac = eckart_young(w.astype(jnp.float32).T, k)   # W ≈ A Bᵀ
-    return {"v": b_fac, "u": a_fac.T}
+    return _agnostic_core(w, k)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def solve_agnostic_with_spectrum(w: jnp.ndarray, k: int):
+    """The agnostic solve plus the full weight spectrum."""
+    return _agnostic_core(w, k)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def whitened_spectrum(w: jnp.ndarray, cov_ab: jnp.ndarray,
+                      cov_bb: jnp.ndarray, *, eps: float = 1e-6,
+                      method: str = "eigh") -> jnp.ndarray:
+    """Singular values of M = Wᵀ C L^{-T} — the spectrum the anchored solve
+    truncates, so the exact objective loss of keeping rank k is the tail
+    energy Σ_{j>k} σ_j² (Thm 3.2).  This is the per-linear signal the
+    adaptive rank allocator water-fills on; it is pure linalg on the
+    accumulated covariances (no forwards)."""
+    wf = w.astype(jnp.float32)
+    _, l_inv_t = _whitening_factors(cov_bb.astype(jnp.float32),
+                                    eps=eps, method=method)
+    mat = wf.T @ (cov_ab.astype(jnp.float32) @ l_inv_t)
+    return jnp.linalg.svd(mat, compute_uv=False)
+
+
+@jax.jit
+def weight_spectrum(w: jnp.ndarray) -> jnp.ndarray:
+    """Plain singular values of W — the agnostic-objective analogue of
+    ``whitened_spectrum`` (Eckart–Young tail energy)."""
+    return jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False)
+
+
+def spectrum_tail_energy(spectrum, k: int) -> float:
+    """Truncation-loss estimate Σ_{j>k} σ_j² (summed over leading bank
+    axes for vmapped expert spectra)."""
+    import numpy as np
+    s = np.asarray(spectrum)
+    return float(np.sum(s[..., k:] ** 2))
 
 
 def factor_error(w, factors, cov_ab, cov_bb, cov_aa) -> jnp.ndarray:

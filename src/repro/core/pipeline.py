@@ -47,10 +47,44 @@ accumulator carry; see ``core.streaming``).  It defaults to on for
 fused/hybrid and off for sequential, whose contract is bit-for-bit seed
 parity (the scan sweep matches the loop to fp32 tolerance, not bitwise).
 
+``CompressConfig.rank_mode`` selects the rank budget policy (the
+"Adaptive" half of AA-SVD):
+
+  * ``"uniform"`` (default) — every linear is truncated at the same target
+    ratio (``ranks.rank_for_ratio``), exactly the paper's — and the
+    pre-adaptive driver's — behaviour, bit-for-bit.
+  * ``"adaptive"`` — two sweeps over the units, one solve budget.  The
+    ESTIMATE sweep is the configured collection policy run at uniform
+    ranks with refinement off: per linear it computes the whitened-spectrum
+    truncation-loss estimate (read off the solve's own SVD,
+    ``lowrank.solve_*_with_spectrum`` — no extra decomposition, no extra
+    tapped forwards)
+    and per group the measured shift drift, and KEEPS every accumulated
+    covariance triple.  ``ranks.allocate_by_loss`` then water-fills the
+    global parameter budget across every compressed linear (expert banks
+    weighted by their copy count), and the SOLVE sweep re-solves each
+    linear from the kept triples at its allocated rank and runs refinement
+    there.  The kept statistics reflect the estimate sweep's uniform-rank
+    shifted stream — the same class of pre-solve approximation fused mode
+    makes, exchanged for a budget-exact non-uniform allocation at zero
+    extra tapped forwards.
+
+``CompressConfig.replay_taps="auto"`` (hybrid mode) replaces the static
+replay list with the measured signal: the fused pass collects every group,
+and a group whose shift drift — the relative divergence of XᵀX vs X′ᵀX′ at
+its tap (``calibration.shift_drift``) — exceeds ``drift_threshold`` resets
+its accumulator and re-collects sequentially at its solve turn.  Expert
+banks are flagged by their own measured drift, no hand-written tap list;
+dense groups that accumulate real drift (deep llama/zamba2 blocks at
+aggressive ratios) get replayed too.
+
 The per-unit report carries ``tapped_forwards`` and ``replayed_groups`` so
 the reduction is observable (see ``benchmarks/calibration_size.py``);
 shared-site (reused) units report ``tapped_forwards: 0`` with their
 ``kind``/``calib_mode`` so downstream consumers never special-case them.
+Per-linear entries report ``rank``/``shift_drift`` (and, under adaptive,
+``trunc_loss_est``/``uniform_rank``); ``report["calibration"]["rank_mode"]``
+summarizes the allocation (achieved vs target ratio, rank spread).
 
 Weight-shared blocks (zamba2's shared attention) are compressed at their
 first invocation site and reused thereafter (DESIGN.md §Arch-applicability).
@@ -87,6 +121,28 @@ LOG = logging.getLogger(__name__)
 @dataclasses.dataclass(frozen=True)
 class CompressConfig:
     """Knobs for ``compress_model`` (Algorithm 2).
+
+    ``rank_mode`` selects the rank budget policy:
+
+      * ``"uniform"`` (default) — every linear truncated at ``ratio``
+        (``ranks.rank_for_ratio``); bit-for-bit the pre-adaptive behaviour.
+      * ``"adaptive"`` — an estimate sweep (the configured ``calib_mode``
+        at uniform ranks, refinement off) computes per-linear
+        whitened-spectrum truncation-loss estimates from the accumulated
+        covariance triples, ``ranks.allocate_by_loss`` water-fills the
+        global parameter budget (budget-exact to one lane multiple,
+        expert banks weighted by copy count), and the solve sweep
+        re-solves from the kept triples at the allocated ranks and
+        refines there.  No extra tapped forwards; the kept statistics
+        reflect the estimate sweep's uniform-rank shifted stream (see
+        module docstring).
+
+    ``replay_taps`` (hybrid mode) lists extra taps to re-collect
+    sequentially; the string ``"auto"`` replaces the static list with the
+    measured signal — a group whose shift drift
+    (``calibration.shift_drift`` of its accumulated triple) exceeds
+    ``drift_threshold`` resets its accumulator and replays at its solve
+    turn.  Expert banks flag themselves by drift, no hand-written list.
 
     ``calib_mesh`` runs stage-1 collection data-parallel over a mesh:
 
@@ -148,6 +204,13 @@ class CompressConfig:
     """
 
     ratio: float = 0.8
+    rank_mode: str = "uniform"    # uniform | adaptive (global water-filling
+    #   over whitened-spectrum loss estimates; see module docstring)
+    rank_floor_ratio: float = 0.25  # adaptive: per-linear ratio floor as a
+    #   fraction of the budget ratio (protects low-loss linears)
+    rank_ceil_ratio: float = 0.0  # adaptive: per-linear ratio ceiling as a
+    #   fraction of the budget ratio (0 = uncapped) — a trust region that
+    #   bounds how far the allocation may leave uniform
     objective: str = "anchored"   # agnostic | input_aware | shift_aware | anchored
     refine: bool = True
     refine_epochs: int = 25
@@ -163,7 +226,13 @@ class CompressConfig:
     rank_multiple: int = 8        # TPU lane-friendly rank rounding
     microbatch: int = 8           # calibration sequences per forward
     calib_mode: str = "sequential"  # sequential (seed parity) | fused | hybrid
-    replay_taps: Tuple[str, ...] = ()  # extra taps replayed in hybrid mode
+    replay_taps: Any = ()         # extra taps replayed in hybrid mode: a
+    #   tuple of tap names, or "auto" to flag groups by measured shift
+    #   drift instead of a hand-written list
+    drift_threshold: float = 0.25  # replay_taps="auto": a group replays
+    #   when ||XᵀX − X′ᵀX′||_F / ||XᵀX||_F at its tap exceeds this
+    #   (0.25 separates deepseek's expert banks, drift 0.29/0.50, from its
+    #   dense groups, 0.12–0.21, on the trained smoke substrate)
     scan_collect: Optional[bool] = None  # scan-batched collection sweeps;
     #   None = auto (on for fused/hybrid or under calib_mesh, else off for
     #   sequential seed parity)
@@ -250,11 +319,14 @@ def tap_groups(specs) -> List[Tuple[str, List[LinearSpec]]]:
 def replay_taps_for(groups, ccfg: "CompressConfig") -> Set[str]:
     """Taps whose groups are re-collected sequentially in hybrid mode:
     expert banks, specs flagged ``replay=True``, plus any extra tap names
-    from ``CompressConfig.replay_taps``."""
+    from ``CompressConfig.replay_taps``.  With ``replay_taps="auto"`` the
+    static policy is bypassed entirely — the driver flags groups by
+    measured shift drift instead — so the string contributes no taps here
+    (and never substring-matches a tap name)."""
+    extra = () if isinstance(ccfg.replay_taps, str) else ccfg.replay_taps
     out: Set[str] = set()
     for tap, group in groups:
-        if tap in ccfg.replay_taps or any(s.bank or s.replay
-                                          for s in group):
+        if tap in extra or any(s.bank or s.replay for s in group):
             out.add(tap)
     return out
 
@@ -402,14 +474,23 @@ def make_unit_apply(kind: str, cfg, seq_len: int, want_taps: bool):
 # per-weight solve
 
 
-def _solve_weight(w, covs, k: int, ccfg: CompressConfig):
+def _solve_weight(w, covs, k: int, ccfg: CompressConfig, *,
+                  want_spectrum: bool = False):
+    """Closed-form solve; ``want_spectrum=True`` (the adaptive estimate
+    sweep) additionally returns the full singular spectrum of the solved
+    matrix from the SAME whitening + SVD — the truncation-loss estimate
+    costs no second decomposition."""
     if ccfg.objective == "agnostic":
+        solve = (LR.solve_agnostic_with_spectrum if want_spectrum
+                 else LR.solve_agnostic)
+        solve = functools.partial(solve, k=k)
         if w.ndim == 3:
-            return jax.vmap(lambda wi: LR.solve_agnostic(wi, k))(w)
-        return LR.solve_agnostic(w, k)
+            return jax.vmap(lambda wi: solve(wi))(w)
+        return solve(w)
     cov_ab, cov_bb = C.objective_covs(covs, ccfg.objective)
-    solve = functools.partial(LR.solve_anchored, k=k, eps=ccfg.eps,
-                              method=ccfg.whiten)
+    solve = (LR.solve_anchored_with_spectrum if want_spectrum
+             else LR.solve_anchored)
+    solve = functools.partial(solve, k=k, eps=ccfg.eps, method=ccfg.whiten)
     if w.ndim == 3:
         return jax.vmap(lambda wi, ca, cb: solve(wi, ca, cb))(w, cov_ab, cov_bb)
     return solve(w, cov_ab, cov_bb)
@@ -419,6 +500,111 @@ def _weight_rank(w, ccfg: CompressConfig) -> int:
     n, m = (w.shape[-2], w.shape[-1])
     return R.rank_for_ratio(m, n, ccfg.ratio, remap=ccfg.remap,
                             multiple=ccfg.rank_multiple)
+
+
+# ---------------------------------------------------------------------------
+# adaptive rank allocation (rank_mode="adaptive")
+
+
+def _estimate_item(unit: "Unit", spec: LinearSpec, w, spectrum,
+                   k_uniform: int) -> Dict[str, Any]:
+    """One allocator input: the whitened-spectrum truncation-loss estimate
+    of this linear at the uniform reference rank.  ``spectrum`` is the
+    singular spectrum of the solved matrix, returned by the estimate
+    sweep's solve itself (``solve_*_with_spectrum``) — the estimate costs
+    no second whitening or SVD, and no forwards.  The agnostic objective
+    estimates from the plain weight spectrum (same Eckart–Young tail).
+
+    The allocator signal is the RELATIVE tail energy Σ_{j>k} σ_j² / Σ σ_j²
+    weighted by the linear's dense parameter count.  Raw tail energies are
+    not commensurable across block positions — each linear's objective is
+    in its own output units (post-softmax attention outputs carry far less
+    energy than FFN inputs, so absolute tails starve ``attn.wo``); the
+    relative tail is scale-invariant and the parameter mass restores the
+    "how much model does this rank protect" weighting.  Measured on the
+    trained llama smoke substrate this definition beats uniform at ratios
+    0.4 AND 0.2 where absolute tails lose at 0.4 (see
+    tests/test_adaptive.py + ROADMAP)."""
+    tail = LR.spectrum_tail_energy(spectrum, k_uniform)
+    total = LR.spectrum_tail_energy(spectrum, 0)
+    section, si, _, ki = unit.where
+    return {"unit": unit.name, "path": spec.path, "tap": spec.tap,
+            "shape": (w.shape[-1], w.shape[-2]),
+            "copies": w.shape[0] if w.ndim == 3 else 1,
+            "uniform_rank": k_uniform,
+            # iterations of one scanned stage restack onto a single
+            # stacked factor buffer, so their ranks are TIED: the
+            # allocator sees one item per (stage, kind-slot, path) with
+            # summed loss and copy count (non-scanned stages and shared
+            # blocks are singleton ties)
+            "tie": (section, si, ki, spec.path),
+            "loss": (tail / max(total, 1e-30)) * int(w.size)}
+
+
+def _allocate_ranks(est: Dict[str, Any], ccfg: CompressConfig):
+    """Global water-filling over every compressed linear: one parameter
+    budget (ratio × total dense params of the compressible linears),
+    budget-exact to one lane multiple (``ranks.allocate_by_loss``)."""
+    items = est["items"]
+    # fold rank-tied linears (iterations of one scanned stage) into one
+    # allocator item: shared rank, summed loss, summed copy count
+    ties: Dict[Tuple, Dict[str, Any]] = {}
+    for it in items:
+        t = ties.get(it["tie"])
+        if t is None:
+            ties[it["tie"]] = {"shape": it["shape"], "loss": it["loss"],
+                               "copies": it["copies"]}
+        else:
+            t["loss"] += it["loss"]
+            t["copies"] += it["copies"]
+    keys = list(ties)
+    ranks = R.allocate_by_loss(
+        [ties[k]["shape"] for k in keys], [ties[k]["loss"] for k in keys],
+        ccfg.ratio, remap=ccfg.remap, multiple=ccfg.rank_multiple,
+        floor_ratio=ccfg.rank_floor_ratio,
+        ceil_ratio=ccfg.rank_ceil_ratio,
+        copies=[ties[k]["copies"] for k in keys])
+    by_tie = dict(zip(keys, ranks))
+    table = {(it["unit"], it["path"]): by_tie[it["tie"]] for it in items}
+    dense = sum(it["copies"] * it["shape"][0] * it["shape"][1]
+                for it in items)
+    stored = sum(it["copies"] * R.rank_cost(*it["shape"], remap=ccfg.remap)
+                 * by_tie[it["tie"]] for it in items)
+    alloc = {"mode": "adaptive", "target_ratio": ccfg.ratio,
+             "achieved_ratio": stored / dense,
+             "budget_params": int(ccfg.ratio * dense),
+             "allocated_params": stored, "linears": len(items),
+             "rank_groups": len(keys),
+             "min_rank": min(ranks), "max_rank": max(ranks)}
+    return table, alloc
+
+
+def _merge_adaptive_report(report, rep1, est: Dict[str, Any],
+                           alloc: Dict[str, Any]) -> None:
+    """Fold the estimate sweep's measurements into the solve sweep's
+    report: the tapped forwards (all collection happened there), replay
+    accounting, per-group drift, and per-linear loss estimates.  The solve
+    sweep itself issued zero tapped forwards."""
+    by_key = {(it["unit"], it["path"]): it for it in est["items"]}
+    for u2, u1 in zip(report["units"], rep1["units"]):
+        u2["tapped_forwards"] = u1["tapped_forwards"]
+        for field in ("replayed_groups", "replay_taps", "shift_drift"):
+            if field in u1:
+                u2[field] = u1[field]
+        drift_by_path = {lin["path"]: lin["shift_drift"]
+                         for lin in u1.get("linears", [])
+                         if "shift_drift" in lin}
+        for lin in u2.get("linears", []):
+            item = by_key.get((u2["name"], lin["path"]))
+            if item is not None:
+                lin["trunc_loss_est"] = item["loss"]
+                lin["uniform_rank"] = item["uniform_rank"]
+            if lin["path"] in drift_by_path:
+                lin["shift_drift"] = drift_by_path[lin["path"]]
+    for field in ("tapped_forwards", "replayed_groups"):
+        report["calibration"][field] = rep1["calibration"][field]
+    report["calibration"]["rank_mode"] = dict(
+        alloc, estimate_forwards=rep1["calibration"]["tapped_forwards"])
 
 
 # ---------------------------------------------------------------------------
@@ -487,6 +673,12 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     """
     if ccfg.calib_mode not in ("sequential", "fused", "hybrid"):
         raise ValueError(f"unknown calib_mode {ccfg.calib_mode!r}")
+    if ccfg.rank_mode not in ("uniform", "adaptive"):
+        raise ValueError(f"unknown rank_mode {ccfg.rank_mode!r} "
+                         "(expected 'uniform' or 'adaptive')")
+    if isinstance(ccfg.replay_taps, str) and ccfg.replay_taps != "auto":
+        raise ValueError(f"unknown replay_taps {ccfg.replay_taps!r} "
+                         "(expected a tuple of tap names or 'auto')")
     mesh = _resolve_calib_mesh(ccfg.calib_mesh)
     # scan-batched collection defaults on for fused/hybrid and whenever a
     # collection mesh is active (DP sharding rides the scan sweep);
@@ -500,12 +692,60 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     refine_scan = ccfg.refine_scan
     if refine_scan is None:
         refine_scan = ccfg.calib_mode != "sequential" or mesh is not None
+
+    if ccfg.rank_mode == "adaptive":
+        # estimate sweep: the configured collection policy at uniform
+        # ranks, refinement off — records per-linear spectra / per-group
+        # drift and keeps every covariance triple (no release)
+        _, rep1, est = _compress_sweep(params, cfg, calib, ccfg, mesh=mesh,
+                                       scan=scan, refine_scan=refine_scan,
+                                       estimate=True)
+        rank_table, alloc = _allocate_ranks(est, ccfg)
+        # solve sweep: re-solve from the kept triples at the allocated
+        # ranks (zero tapped forwards) + refinement at the final ranks
+        new_params, report, _ = _compress_sweep(
+            params, cfg, calib, ccfg, mesh=mesh, scan=scan,
+            refine_scan=refine_scan, rank_table=rank_table,
+            covs_table=est["covs"])
+        _merge_adaptive_report(report, rep1, est, alloc)
+        return new_params, report
+
+    new_params, report, _ = _compress_sweep(params, cfg, calib, ccfg,
+                                            mesh=mesh, scan=scan,
+                                            refine_scan=refine_scan)
+    return new_params, report
+
+
+def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
+                    ccfg: CompressConfig, *, mesh, scan, refine_scan,
+                    estimate: bool = False,
+                    rank_table: Optional[Dict[Tuple[str, str], int]] = None,
+                    covs_table: Optional[Dict[str, Dict]] = None):
+    """One full pass over the units (the pre-adaptive ``compress_model``
+    body).  The default invocation is the uniform driver, bit-for-bit.
+
+    ``estimate`` (adaptive sweep 1): solve at uniform ranks, skip
+    refinement and the no-refine MSE probe, record per-linear
+    whitened-spectrum items, and keep every accumulated covariance triple
+    (returned in the estimate record instead of being released).
+    ``rank_table`` ((unit name, path) → rank, adaptive sweep 2): overrides
+    the uniform rank per linear.  ``covs_table`` (unit name → tap → covs,
+    adaptive sweep 2): reuse kept triples instead of collecting — no
+    engine, no tapped forwards.
+    """
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
     units = unroll_units(params, cfg)
     report: Dict[str, Any] = {
         "units": [],
         "config": dataclasses.asdict(dataclasses.replace(
             ccfg, calib_mesh=_mesh_label(ccfg.calib_mesh)))}
+    # adaptive estimate record: one item per compressed linear (allocator
+    # input) + the kept covariance triples for the solve sweep
+    est: Optional[Dict[str, Any]] = None
+    if estimate:
+        est = {"items": [], "covs": {}}
+    auto_replay = ccfg.calib_mode == "hybrid" \
+        and isinstance(ccfg.replay_taps, str)
 
     mb = ccfg.microbatch
     x_stream = _embed_stream(params, cfg, calib, mb)       # original
@@ -576,11 +816,11 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         # ---- stage 1: streaming covariance accumulation + closed-form solve
         groups = tap_groups(linear_specs(unit.kind, cfg))
         replays: Set[str] = set()
-        if ccfg.calib_mode == "hybrid":
+        if ccfg.calib_mode == "hybrid" and not auto_replay:
             replays = replay_taps_for(groups, ccfg)
         engine: Optional[S.CalibrationEngine] = None
         anchors = None  # original-stream outputs captured by the fused pass
-        if ccfg.objective != "agnostic":
+        if ccfg.objective != "agnostic" and covs_table is None:
             engine = S.CalibrationEngine.for_unit(
                 groups, fwd_taps, orig_p, xs[0],
                 None if dec_aux_o is None else dec_aux_o[0], mesh=mesh)
@@ -590,12 +830,24 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                                                scan=scan)
             elif ccfg.calib_mode == "hybrid":
                 # one fused pass for every non-replay group + the anchors;
-                # replay groups collect at their solve turn below
+                # replay groups collect at their solve turn below (with
+                # replay_taps="auto" the skip set is empty — every group
+                # is fused-collected and the drift measurement decides)
                 anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
                                                xs, xps, dec_aux_o, dec_aux_c,
                                                skip=replays, scan=scan)
         replayed = []
+        drifts: Dict[str, float] = {}
         for tap, group in groups:
+            drift: Optional[float] = None
+            if engine is not None and auto_replay:
+                # error-driven auto-replay: the fused statistics carry the
+                # measured divergence of the shifted stream at this tap;
+                # past the threshold, discard them and replay sequentially
+                drift = engine.drift(tap)
+                if drift > ccfg.drift_threshold:
+                    engine.reset(tap)
+                    replays.add(tap)
             if engine is not None and (ccfg.calib_mode == "sequential"
                                        or tap in replays):
                 # sequential semantics: both streams replayed for this
@@ -604,7 +856,19 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                                      dec_aux_o, dec_aux_c, scan=scan)
                 if tap in replays:
                     replayed.append(tap)
-            covs = engine.covs_for(tap) if engine is not None else None
+            if engine is not None and drift is None:
+                drift = engine.drift(tap)
+            if drift is not None:
+                drifts[tap] = drift
+            if engine is not None:
+                covs = engine.covs_for(tap)
+            elif covs_table is not None and ccfg.objective != "agnostic":
+                # strict lookup: a (unit, tap) the estimate sweep did not
+                # record must fail loudly, never silently fall back to an
+                # agnostic solve (the agnostic path stores no triples)
+                covs = covs_table[unit.name][tap]
+            else:
+                covs = None
             if ccfg.debug_covs and covs is not None:
                 unit_report.setdefault("covs", {})[tap] = \
                     jax.tree.map(lambda a: jax.device_get(a), covs)
@@ -612,22 +876,49 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                 wp = get_path(cur_p, spec.path)
                 w = wp["w"]
                 k = _weight_rank(w, ccfg)
-                factors = _solve_weight(w, covs, k, ccfg)
+                if rank_table is not None:
+                    k = rank_table[(unit.name, spec.path)]
+                if est is not None:
+                    # one decomposition serves both: the solve's own SVD
+                    # yields the spectrum the loss estimate reads
+                    factors, spectrum = _solve_weight(w, covs, k, ccfg,
+                                                      want_spectrum=True)
+                    est["items"].append(
+                        _estimate_item(unit, spec, w, spectrum, k))
+                else:
+                    factors = _solve_weight(w, covs, k, ccfg)
                 new_p = {kk: vv for kk, vv in wp.items() if kk != "w"}
                 new_p.update(factors)
                 set_path(cur_p, spec.path, new_p)
-                unit_report["linears"].append(
-                    {"path": spec.path, "rank": k, "shape": list(w.shape),
-                     "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2], k,
-                                               remap=ccfg.remap)})
-            if engine is not None:
+                entry = {"path": spec.path, "rank": k,
+                         "shape": list(w.shape),
+                         "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2],
+                                                   k, remap=ccfg.remap)}
+                if drift is not None:
+                    entry["shift_drift"] = drift
+                unit_report["linears"].append(entry)
+            if engine is not None and est is None:
                 engine.release(tap)  # solved: free this group's covariances
+            if covs_table is not None:
+                # the solve sweep's analogue of engine.release: a kept
+                # triple is only read at its unit's solve turn, so free it
+                # there — peak memory through refinement tracks the
+                # not-yet-solved remainder, not the full table
+                covs_table[unit.name].pop(tap, None)
             LOG.debug("%s: group %s -> rank %d", unit.name, tap,
                       unit_report["linears"][-1]["rank"])
+        if est is not None:
+            # keep the triples for the solve sweep (adaptive re-solves each
+            # linear from exactly these statistics at the allocated rank)
+            est["covs"][unit.name] = (
+                {tap: engine.covs_for(tap) for tap, _ in groups}
+                if engine is not None else {})
         unit_report["tapped_forwards"] = \
             engine.stats["tapped_forwards"] if engine is not None else 0
         unit_report["replayed_groups"] = len(replayed)
         unit_report["replay_taps"] = replayed
+        if drifts:
+            unit_report["shift_drift"] = drifts
 
         # ---- stage 2: block-level refinement --------------------------------
         # anchors stay in the STREAM dtype/placement (the refinement loss
@@ -643,7 +934,7 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         # places the anchors itself, and stream propagation below re-commits
         # the DP layout — an eager per-microbatch device_put would be paid
         # and then discarded on the default path)
-        if ccfg.refine:
+        if ccfg.refine and not estimate:
             xp_b = [(xps[i], None if dec_aux_c is None else dec_aux_c[i])
                     for i in range(len(xps))]
             # fwd is passed DIRECTLY (memoized per (kind, cfg, seq_len)):
@@ -663,7 +954,7 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
                                refine_mode=hist["mode"],
                                refine_dispatches=hist["dispatches"],
                                refine_wall=time.perf_counter() - t0)
-        else:
+        elif not estimate:  # the estimate sweep skips the MSE probe too
             mse = float(sum(
                 jnp.mean(jnp.square(
                     fwd(cur_p, xps[i],
@@ -705,6 +996,9 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         # counts above covered calib_dp microbatches at once (per-device
         # forwards = the counts as reported)
         "calib_dp": 1 if mesh is None else SH.dp_degree(mesh),
+        # rank budget policy; adaptive runs overwrite this with the full
+        # allocation summary (_merge_adaptive_report)
+        "rank_mode": {"mode": ccfg.rank_mode},
     }
     refined = [u for u in report["units"] if "refine_wall" in u]
     report["refinement"] = {
@@ -714,7 +1008,7 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
         "wall": sum(u["refine_wall"] for u in refined),
     }
     new_params = restack_units(params, cfg, units)
-    return new_params, report
+    return new_params, report, est
 
 
 def compress_ratio_report(params, new_params) -> Dict[str, float]:

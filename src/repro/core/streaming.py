@@ -402,10 +402,25 @@ class CalibrationEngine:
     def covs_for(self, tap: str) -> Dict[str, jnp.ndarray]:
         return self._acc(tap).covs
 
+    def drift(self, tap: str) -> float:
+        """Measured shift drift of this tap's accumulated statistics
+        (``calibration.shift_drift``): the error-driven signal behind
+        ``replay_taps="auto"`` and the report's ``shift_drift`` fields."""
+        return C.shift_drift(self._acc(tap).covs)
+
+    def reset(self, tap: str) -> None:
+        """Zero a tap's accumulator so the group can be re-collected from
+        scratch — the auto-replay path: a fused-collected group whose
+        measured drift crosses the threshold discards its pre-solve
+        statistics and replays sequentially.  Unlike ``release`` the tap
+        stays live."""
+        self.accumulators.pop(tap, None)
+
     def release(self, tap: str) -> None:
         """Drop a tap's accumulator once its group is solved — frees the
         3·n² (or 3·E·n²) fp32 state so per-unit peak memory tracks the
-        largest single group, not the sum over groups.  Further access to
-        the tap raises (no silent zeroed resurrection)."""
-        self.accumulators.pop(tap, None)
+        largest single group, not the sum over groups.  A ``reset`` plus
+        the tombstone: further access to the tap raises (no silent zeroed
+        resurrection)."""
+        self.reset(tap)
         self._released.add(tap)

@@ -43,6 +43,17 @@ class Server:
                  extras: Optional[dict] = None) -> jnp.ndarray:
         """prompts: (batch, prompt_len) int32 -> (batch, steps) generated."""
         b, plen = prompts.shape
+        if plen + steps > self.max_len:
+            # the decode cache holds max_len positions; past it the write
+            # indices leave the buffer and the attention window silently
+            # corrupts (dynamic-update clamping) — fail loudly instead.
+            # The contract reserves a slot for every generated position
+            # (the final token's own slot is never written back, so the
+            # bound is deliberately conservative by one).
+            raise ValueError(
+                f"prompt_len ({plen}) + steps ({steps}) = {plen + steps} "
+                f"exceeds the cache capacity max_len ({self.max_len}); "
+                "raise Server(max_len=...) or generate fewer steps")
         cache = M.init_cache(self.cfg, b, self.max_len)
         batch = {"tokens": prompts, **(extras or {})}
         next_tok, cache = self._prefill(self.params, batch, cache)

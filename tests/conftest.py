@@ -8,3 +8,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Pinned hypothesis profile: tier-1 property suites (tests/test_ranks.py,
+# tests/test_pipeline_props.py) must be deterministic in CI — fixed seed
+# (derandomize) and no wall-clock deadline (CI runners jitter).  Select a
+# different profile with HYPOTHESIS_PROFILE=default for local shrinking.
+try:
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("ci", derandomize=True, deadline=None,
+                                print_blob=True)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+except ImportError:  # requirements-dev.txt dev dependency
+    pass

@@ -114,3 +114,21 @@ class TestServer:
         b = srv.generate(prompts, steps=6)
         assert a.shape == (2, 6)
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_generate_rejects_cache_overflow(self):
+        """prompt_len + steps past max_len used to wrap the cache write
+        positions silently; now it fails loudly (ISSUE 5)."""
+        from repro.configs import get_smoke_config
+        from repro.data import synthetic_tokens
+        from repro.launch.serve import Server
+        from repro.models import model as M
+        cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        srv = Server(cfg, params, max_len=24)
+        prompts = synthetic_tokens(jax.random.PRNGKey(1), 2, 16,
+                                   cfg.vocab_size)
+        with pytest.raises(ValueError, match="max_len"):
+            srv.generate(prompts, steps=16)
+        # the boundary itself is legal: 16 + 8 == max_len
+        out = srv.generate(prompts, steps=8)
+        assert out.shape == (2, 8)

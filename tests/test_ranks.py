@@ -1,0 +1,263 @@
+"""Property suite locking the adaptive rank allocator (ISSUE 5).
+
+``ranks.allocate_by_loss`` invariants:
+
+* budget conservation — the summed allocation never exceeds the global
+  parameter budget (floors are re-normalized against it), and lands within
+  one lane-multiple step of it unless every item sits at its representable
+  cap (the only degenerate overshoot: a budget too small for rank 1
+  everywhere returns the minimal allocation);
+* validity — every rank lies in [1, rank_cap] and is lane-aligned (a
+  multiple of ``multiple``, the cap, or the rank-1 bottom), for remap and
+  non-remap accounting and for expert-bank ``copies`` weights;
+* permutation equivariance — the allocation is a function of the item
+  contents plus the global budget, not of the input order (for
+  content-distinct items; fully identical items are interchangeable);
+* monotonicity — among equal-shape, equal-copies items, strictly higher
+  loss never gets a strictly lower rank.
+
+The invariants are checked twice: by hypothesis (CI, deterministic pinned
+profile — see conftest) and by a seeded fuzz loop over the same generator
+shape that runs even without the dev dependency.
+"""
+
+import random
+
+import pytest
+
+from repro.core import ranks as R
+
+# ---------------------------------------------------------------------------
+# shared invariant checkers (hypothesis and the seeded fuzz both use these)
+
+
+def _storage(shapes, ks, copies, *, remap):
+    return sum(c * R.rank_cost(m, n, remap=remap) * k
+               for c, (m, n), k in zip(copies, shapes, ks))
+
+
+def check_invariants(shapes, losses, ratio, *, remap, multiple, copies=None,
+                     ceil_ratio=0.0):
+    ks = R.allocate_by_loss(shapes, losses, ratio, remap=remap,
+                            multiple=multiple, copies=copies,
+                            ceil_ratio=ceil_ratio)
+    n = len(shapes)
+    assert len(ks) == n
+    copies = list(copies) if copies is not None else [1] * n
+    kmaxs = [R.rank_cap(m, n_, remap=remap) for m, n_ in shapes]
+    total = sum(c * m * n_ for c, (m, n_) in zip(copies, shapes))
+    budget = int(ratio * total)
+    stored = _storage(shapes, ks, copies, remap=remap)
+
+    for k, km in zip(ks, kmaxs):
+        assert 1 <= k <= km
+        assert k % multiple == 0 or k == km or k == 1, (k, km, multiple)
+
+    min_cost = _storage(shapes, [1] * n, copies, remap=remap)
+    if min_cost > budget:
+        # degenerate: rank 1 everywhere already overflows — the minimal
+        # valid allocation is the documented answer
+        assert ks == [1] * n
+        return ks
+    assert stored <= budget, (stored, budget)
+    # the one-lane-step budget gap holds whenever the greedy stopped for
+    # budget reasons; a binding ceiling (trust region) deliberately leaves
+    # budget unused, so the gap bound is only asserted uncapped
+    if ceil_ratio == 0.0 and not all(k == km for k, km in zip(ks, kmaxs)):
+        max_step = max(c * R.rank_cost(m, n_, remap=remap) * multiple
+                       for c, (m, n_) in zip(copies, shapes))
+        assert budget - stored <= max_step, (budget, stored, max_step)
+    return ks
+
+
+def check_monotone(shapes, losses, ks, copies=None):
+    copies = list(copies) if copies is not None else [1] * len(shapes)
+    for i in range(len(shapes)):
+        for j in range(len(shapes)):
+            if (shapes[i] == shapes[j] and copies[i] == copies[j]
+                    and losses[i] > losses[j]):
+                assert ks[i] >= ks[j], (i, j, losses[i], losses[j], ks)
+
+
+def check_equivariant(shapes, losses, ratio, ks, *, remap, multiple,
+                      copies, perm, ceil_ratio=0.0):
+    copies = list(copies) if copies is not None else [1] * len(shapes)
+    p_ks = R.allocate_by_loss([shapes[j] for j in perm],
+                              [losses[j] for j in perm], ratio,
+                              remap=remap, multiple=multiple,
+                              ceil_ratio=ceil_ratio,
+                              copies=[copies[j] for j in perm])
+    assert p_ks == [ks[j] for j in perm]
+
+
+# ---------------------------------------------------------------------------
+# one problem generator shared by hypothesis and the seeded fuzz
+
+
+def random_problem(rng: random.Random):
+    n = rng.randint(1, 12)
+    pool = [(rng.randint(2, 96), rng.randint(2, 96))
+            for _ in range(rng.randint(1, 4))]
+    shapes = [rng.choice(pool) for _ in range(n)]
+    # unique losses: equivariance is only defined for content-distinct items
+    losses = rng.sample([10.0 ** rng.uniform(-6, 6) * (1 + i)
+                         for i in range(4 * n)], n)
+    ratio = rng.uniform(0.05, 0.95)
+    remap = rng.random() < 0.5
+    multiple = rng.choice([1, 4, 8])
+    copies = ([rng.randint(1, 4) for _ in range(n)]
+              if rng.random() < 0.3 else None)
+    # trust-region ceiling: mostly uncapped (the default), sometimes live
+    ceil = rng.choice([0.0, 0.0, 0.0, 1.2, 1.5, 2.0])
+    return shapes, losses, ratio, remap, multiple, copies, ceil
+
+
+class TestSeededFuzz:
+    """The full invariant battery without the hypothesis dependency."""
+
+    def test_invariants_over_seeded_problems(self):
+        rng = random.Random(20260731)
+        for trial in range(150):
+            shapes, losses, ratio, remap, multiple, copies, ceil = \
+                random_problem(rng)
+            ks = check_invariants(shapes, losses, ratio, remap=remap,
+                                  multiple=multiple, copies=copies,
+                                  ceil_ratio=ceil)
+            check_monotone(shapes, losses, ks, copies)
+            perm = list(range(len(shapes)))
+            rng.shuffle(perm)
+            check_equivariant(shapes, losses, ratio, ks, remap=remap,
+                              multiple=multiple, copies=copies, perm=perm,
+                              ceil_ratio=ceil)
+
+
+class TestFloorHandling:
+    def test_tiny_shapes_lane_rounding_stays_in_budget(self):
+        """Regression (ISSUE 5): the old allocator ceiled every rank to the
+        lane multiple AFTER the budget bisection, so near-uniform losses on
+        small shapes overflowed to full rank (2x the budget here)."""
+        shapes = [(10, 10)] * 6
+        losses = [1.0 + 1e-3 * i for i in range(6)]
+        ks = R.allocate_by_loss(shapes, losses, 0.5, multiple=8)
+        stored = _storage(shapes, ks, [1] * 6, remap=False)
+        assert stored <= int(0.5 * 600)
+        # and the budget is actually used: not everything collapsed to 1
+        assert max(ks) > 1
+
+    def test_overlarge_floor_renormalized(self):
+        """floor_ratio pushing the summed floors past the budget is scaled
+        back instead of overflowing (floors never below rank 1)."""
+        shapes = [(64, 64)] * 4
+        ks = R.allocate_by_loss(shapes, [1.0] * 4, 0.3, floor_ratio=1.5)
+        stored = _storage(shapes, ks, [1] * 4, remap=False)
+        assert stored <= int(0.3 * 4 * 4096)
+        assert all(k >= 1 for k in ks)
+
+    def test_floor_protects_low_loss_items(self):
+        """A sane floor still guarantees low-loss items a minimum share."""
+        shapes = [(64, 64)] * 3
+        ks = R.allocate_by_loss(shapes, [1e6, 1.0, 1e-6], 0.5,
+                                floor_ratio=0.25, multiple=8)
+        floor_rank = R._lattice_floor(
+            R._real_rank(64, 64, 0.25 * 0.5, remap=False), 32, 8)
+        assert ks[2] >= floor_rank >= 1
+
+    def test_degenerate_budget_returns_minimal_allocation(self):
+        shapes = [(9, 9)] * 4
+        ks = R.allocate_by_loss(shapes, [1.0, 2.0, 3.0, 4.0], 0.05,
+                                multiple=8)
+        assert ks == [1] * 4
+
+
+class TestKnownAllocations:
+    def test_budget_exact_on_lane_lattice(self):
+        """Equal shapes, one dominant loss: the heavy item climbs the lane
+        lattice until the light item's rank-1 bottom blocks its last full
+        step, and the leftover goes to the light item — hitting the budget
+        EXACTLY (4096 params = 24·128 + 8·128)."""
+        shapes = [(64, 64)] * 2
+        ks = R.allocate_by_loss(shapes, [100.0, 1e-9], 0.5,
+                                floor_ratio=0.0, multiple=8)
+        assert ks == [24, 8]
+        assert _storage(shapes, ks, [1, 1], remap=False) == int(0.5 * 8192)
+
+    def test_bank_copies_weight_the_budget(self):
+        """An expert bank pays copies× per rank unit: with equal loss and
+        shape, the single-copy item can afford more rank."""
+        shapes = [(32, 64), (32, 64)]
+        ks = R.allocate_by_loss(shapes, [1.0, 1.0 + 1e-12], 0.5,
+                                copies=[4, 1], multiple=1, floor_ratio=0.0)
+        stored = _storage(shapes, ks, [4, 1], remap=False)
+        assert stored <= int(0.5 * 5 * 2048)
+
+    def test_remap_uses_remap_accounting(self):
+        shapes = [(16, 128)] * 2
+        ks = R.allocate_by_loss(shapes, [1.0, 2.0], 0.5, remap=True,
+                                multiple=1, floor_ratio=0.0)
+        stored = _storage(shapes, ks, [1, 1], remap=True)
+        assert stored <= int(0.5 * 2 * 2048)
+        assert all(k <= 16 for k in ks)  # remap cap = min(m, n)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: the same invariants under adversarial generation (CI runs
+# these under the pinned deterministic profile — see conftest).  Guarded by
+# an `if` rather than importorskip so the seeded fuzz above still runs
+# without the dev dependency.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _SHAPES = st.tuples(st.integers(2, 96), st.integers(2, 96))
+
+    @st.composite
+    def alloc_problems(draw):
+        n = draw(st.integers(min_value=1, max_value=12))
+        pool = draw(st.lists(_SHAPES, min_size=1, max_size=4))
+        shapes = [draw(st.sampled_from(pool)) for _ in range(n)]
+        losses = draw(st.lists(
+            st.floats(min_value=1e-9, max_value=1e9,
+                      allow_nan=False, allow_infinity=False),
+            min_size=n, max_size=n, unique=True))
+        ratio = draw(st.floats(min_value=0.05, max_value=0.95))
+        remap = draw(st.booleans())
+        multiple = draw(st.sampled_from([1, 4, 8]))
+        copies = draw(st.one_of(st.none(), st.lists(
+            st.integers(1, 4), min_size=n, max_size=n)))
+        ceil = draw(st.sampled_from([0.0, 0.0, 0.0, 1.2, 1.5, 2.0]))
+        return shapes, losses, ratio, remap, multiple, copies, ceil
+
+    class TestAllocatorProperties:
+        @given(alloc_problems())
+        @settings(max_examples=200, deadline=None)
+        def test_budget_and_validity(self, problem):
+            shapes, losses, ratio, remap, multiple, copies, ceil = problem
+            check_invariants(shapes, losses, ratio, remap=remap,
+                             multiple=multiple, copies=copies,
+                             ceil_ratio=ceil)
+
+        @given(alloc_problems())
+        @settings(max_examples=150, deadline=None)
+        def test_monotone_in_loss(self, problem):
+            shapes, losses, ratio, remap, multiple, copies, ceil = problem
+            ks = R.allocate_by_loss(shapes, losses, ratio, remap=remap,
+                                    multiple=multiple, copies=copies,
+                                    ceil_ratio=ceil)
+            check_monotone(shapes, losses, ks, copies)
+
+        @given(alloc_problems(), st.randoms(use_true_random=False))
+        @settings(max_examples=150, deadline=None)
+        def test_permutation_equivariant(self, problem, rnd):
+            shapes, losses, ratio, remap, multiple, copies, ceil = problem
+            ks = R.allocate_by_loss(shapes, losses, ratio, remap=remap,
+                                    multiple=multiple, copies=copies,
+                                    ceil_ratio=ceil)
+            perm = list(range(len(shapes)))
+            rnd.shuffle(perm)
+            check_equivariant(shapes, losses, ratio, ks, remap=remap,
+                              multiple=multiple, copies=copies, perm=perm,
+                              ceil_ratio=ceil)
