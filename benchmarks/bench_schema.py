@@ -1,0 +1,103 @@
+"""Schema validation for the BENCH_<n>.json wall-clock artifacts.
+
+Every artifact ``benchmarks/wallclock.py`` emits must carry the same
+machine-readable shape so the perf trajectory stays comparable across PRs;
+CI runs this validator over the artifacts it is about to upload and fails
+the build on drift.
+
+    python -m benchmarks.bench_schema BENCH_*.json
+
+Top level (all required):
+    schema_version  int, == SCHEMA_VERSION
+    backend         str ("cpu" | "tpu" | "gpu")
+    device_kind     str
+    mode            str ("interpret" | "mosaic")
+    rows            [{name: str, us: float >= 0, meta: dict}, ...]  nonempty
+    claims          [{name: str, pass: bool, detail: str}, ...] with at
+                    least one claim named ``claim_I6*``
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+SCHEMA_VERSION = 1
+
+
+def validate(doc) -> List[str]:
+    """Return every schema problem found (empty list = valid)."""
+    bad: List[str] = []
+    if not isinstance(doc, dict):
+        return ["artifact is not a JSON object"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        bad.append(f"schema_version {doc.get('schema_version')!r} != "
+                   f"{SCHEMA_VERSION}")
+    for key in ("backend", "device_kind", "mode"):
+        if not isinstance(doc.get(key), str) or not doc.get(key):
+            bad.append(f"{key}: missing or not a non-empty string")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        bad.append("rows: missing or empty")
+    else:
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict):
+                bad.append(f"rows[{i}]: not an object")
+                continue
+            if not isinstance(r.get("name"), str) or not r.get("name"):
+                bad.append(f"rows[{i}].name: missing")
+            us = r.get("us")
+            if not isinstance(us, (int, float)) or isinstance(us, bool) \
+                    or us < 0:
+                bad.append(f"rows[{i}].us: not a non-negative number")
+            if not isinstance(r.get("meta"), dict):
+                bad.append(f"rows[{i}].meta: not an object")
+    claims = doc.get("claims")
+    if not isinstance(claims, list) or not claims:
+        bad.append("claims: missing or empty")
+    else:
+        for i, c in enumerate(claims):
+            if not isinstance(c, dict):
+                bad.append(f"claims[{i}]: not an object")
+                continue
+            if not isinstance(c.get("name"), str) or not c.get("name"):
+                bad.append(f"claims[{i}].name: missing")
+            if not isinstance(c.get("pass"), bool):
+                bad.append(f"claims[{i}].pass: not a bool")
+            if not isinstance(c.get("detail"), str):
+                bad.append(f"claims[{i}].detail: not a string")
+        if not any(isinstance(c, dict)
+                   and str(c.get("name", "")).startswith("claim_I6")
+                   for c in claims):
+            bad.append("claims: no claim_I6* entry")
+    return bad
+
+
+def validate_file(path: str) -> List[str]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"unreadable: {e}"]
+    return validate(doc)
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("bench_schema: no artifacts given", file=sys.stderr)
+        return 1
+    rc = 0
+    for path in argv:
+        problems = validate_file(path)
+        if problems:
+            rc = 1
+            for p in problems:
+                print(f"{path}: {p}", file=sys.stderr)
+        else:
+            print(f"{path}: OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

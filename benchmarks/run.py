@@ -10,10 +10,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
   memory_speedup       — App. B.3/B.4 + Table 4 (ratio math, params, serving)
   kernel_bench         — Pallas kernel motivations (traffic models + timings)
   roofline_report      — §Roofline summary from the dry-run artifacts
+  wallclock            — tracked perf trajectory (ISSUE 6): tuned-vs-default
+                         kernel wall, stage-1/stage-2 wall, BENCH_<n>.json
+
+``--wallclock`` runs ONLY the wall-clock benchmark (with a shorter train
+substrate) and emits its versioned artifact — the CI kernel-bench smoke
+job's entry point:
+
+    python benchmarks/run.py --wallclock --out-dir artifacts/
 """
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -21,22 +30,43 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-def main() -> None:
+def main(argv=None) -> None:
     import time
 
-    from benchmarks import (calibration_size, compression_quality,
-                            error_evolution, kernel_bench, memory_speedup,
-                            refine_speed, roofline_report)
-    from benchmarks.common import train_small_model
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--wallclock", action="store_true",
+                    help="run only the wall-clock benchmark + artifact")
+    ap.add_argument("--out-dir", default=None,
+                    help="BENCH_<n>.json directory "
+                         "(default: benchmarks/artifacts/)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="train steps for the substrate model")
+    args = ap.parse_args(argv)
 
     t0 = time.time()
     print("name,us_per_call,derived")
-    cfg, params, final_loss = train_small_model(steps=200)
+    if args.wallclock:
+        from benchmarks import wallclock
+        doc = wallclock.collect(steps=args.steps or 60)
+        path = wallclock.emit(doc, args.out_dir)
+        for row in wallclock.summary_rows(doc):
+            print(row)
+        print(f"wallclock_artifact,0.0,{path}")
+        print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},"
+              "end-to-end")
+        return
+
+    from benchmarks import (calibration_size, compression_quality,
+                            error_evolution, kernel_bench, memory_speedup,
+                            refine_speed, roofline_report, wallclock)
+    from benchmarks.common import train_small_model
+
+    cfg, params, final_loss = train_small_model(steps=args.steps or 200)
     print(f"train_substrate_200steps,0.0,final_loss={final_loss:.3f}")
     ctx = {"cfg": cfg, "params": params}
     for mod in (compression_quality, error_evolution, calibration_size,
                 refine_speed, memory_speedup, kernel_bench,
-                roofline_report):
+                roofline_report, wallclock):
         for row in mod.run(ctx):
             print(row)
     print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},end-to-end")

@@ -19,8 +19,11 @@ contractions), the pure-jnp reference elsewhere.  No covariance matmul is
 issued directly from this module.
 
 Distributed: accumulate per-device partial covariances on data-sharded
-activations and all-reduce once per block (a single d×d psum; the jitted
-``update`` lowers to exactly that under pjit when token dims are sharded).
+activations and all-reduce once per block (a single d×d psum per triple
+element).  The cov wrappers run the fused Pallas kernel INSIDE a
+``shard_map`` over the mesh's data axes, so DP workers keep the
+single-pass path on their local token shards — no fallback to an XLA
+einsum under a mesh.
 """
 
 from __future__ import annotations
@@ -52,9 +55,10 @@ def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
     the accumulator shape.
 
     ``mesh`` (static, hashable) marks the activations as data-parallel
-    sharded over the mesh's data axes: the accumulated triple is constrained
-    replicated, which lowers to per-device partial products + one n×n psum
-    per update (the sharded-calibration reduction).  Being a static jit arg
+    sharded over the mesh's data axes: the cov wrappers shard_map the fused
+    kernel over those axes, producing per-device partial products + one n×n
+    psum per update (the sharded-calibration reduction), and the
+    accumulated triple is constrained replicated.  Being a static jit arg
     keeps sharded and unsharded traces in separate cache entries."""
     x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
     xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp

@@ -814,6 +814,7 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
                        "calib_mode": ccfg.calib_mode, "linears": []}
 
         # ---- stage 1: streaming covariance accumulation + closed-form solve
+        t_s1 = time.perf_counter()
         groups = tap_groups(linear_specs(unit.kind, cfg))
         replays: Set[str] = set()
         if ccfg.calib_mode == "hybrid" and not auto_replay:
@@ -917,6 +918,7 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
             engine.stats["tapped_forwards"] if engine is not None else 0
         unit_report["replayed_groups"] = len(replayed)
         unit_report["replay_taps"] = replayed
+        unit_report["calib_wall"] = time.perf_counter() - t_s1
         if drifts:
             unit_report["shift_drift"] = drifts
 
@@ -999,6 +1001,9 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
         # rank budget policy; adaptive runs overwrite this with the full
         # allocation summary (_merge_adaptive_report)
         "rank_mode": {"mode": ccfg.rank_mode},
+        # stage-1 wall clock (collection + solves), summed over units —
+        # the benchmark trajectory's stage-1 row reads this
+        "wall": sum(u.get("calib_wall", 0.0) for u in report["units"]),
     }
     refined = [u for u in report["units"] if "refine_wall" in u]
     report["refinement"] = {

@@ -54,13 +54,15 @@ microbatches onto one scan step — the stacked stream reshapes from
 placed with ``distributed.sharding.calib_stream_spec`` over the mesh's data
 axes, so every DP worker runs the tapped forward on exactly its own
 microbatches.  Covariance accumulation contracts token rows across the
-sharded dim; the accumulator carry is constrained replicated
-(``cov_spec``), which GSPMD lowers to per-worker partial {XᵀX, XᵀX',
-X'ᵀX'} products + one n×n psum per update.  The solve consumes fully
-reduced replicated covariances, so it is bitwise-independent of the DP
-degree; the covariances themselves match the unsharded sweep to fp32
-tolerance (token-row summation order changes).  A microbatch count not
-divisible by dp falls back to the unfolded sweep.
+sharded dim: ``kernels.ops.cov_accum`` shard_maps the fused single-pass
+kernel over the data axes, so each worker computes partial {XᵀX, XᵀX',
+X'ᵀX'} products from its local shard and one n×n psum per triple element
+reduces them; the accumulator carry stays constrained replicated
+(``cov_spec``).  The solve consumes fully reduced replicated covariances,
+so it is bitwise-independent of the DP degree; the covariances themselves
+match the unsharded sweep to fp32 tolerance (token-row summation order
+changes).  A microbatch count not divisible by dp falls back to the
+unfolded sweep.
 
 The engine counts every tapped forward it issues (``stats``); the driver
 surfaces the counts in its per-unit report so benchmarks and tests can

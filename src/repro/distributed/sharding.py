@@ -296,6 +296,21 @@ def cov_spec(mesh: Mesh) -> P:
     return P()
 
 
+def data_shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across JAX versions.
+
+    The SPMD cov path in ``kernels.ops`` maps a Pallas call over the data
+    axes; ``pallas_call`` carries no replication rule, so the rep checker
+    must be disabled.  The kwarg was renamed ``check_rep`` -> ``check_vma``
+    when shard_map graduated from jax.experimental — try both."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
 def _cache_leaf_spec(kind: str, name: str, shape, mesh: Mesh) -> P:
     """Spec for one cache leaf with NO leading layer-stack dim.
 

@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the AA-SVD hot spots.
 
 - ``lowrank_matmul`` — fused (x@V)@U factorized inference GEMM (VMEM-resident
-  rank-k intermediate, phase-fused two-stage grid)
+  rank-k intermediate, phase-fused two-stage grid, fused bias/residual
+  epilogue)
 - ``cov_accum``     — one-pass streaming {XᵀX, XᵀX', X'ᵀX'} calibration GEMMs
+  (SPMD-partitionable: shard_map'd over a data-parallel mesh)
 - ``flash_attention`` — blockwise online-softmax attention (causal/window/GQA)
 
 ``ops`` holds the jit'd dispatch wrappers (Pallas on TPU, jnp refs on CPU);
+``autotune`` the block-shape measure-and-cache engine feeding them;
 ``ref`` the pure-jnp oracles the tests sweep against.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import autotune, ops, ref  # noqa: F401

@@ -26,7 +26,8 @@ from repro.kernels.compat import CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(scale: float, causal: bool, window: int, bq: int, bk: int,
+def _kernel(scale: float, causal: bool, window: int, lk_valid: int,
+            bq: int, bk: int,
             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
     kv_idx = pl.program_id(2)
     n_kv = pl.num_programs(2)
@@ -50,6 +51,11 @@ def _kernel(scale: float, causal: bool, window: int, bq: int, bk: int,
         mask &= k_pos <= q_pos
     if window:
         mask &= k_pos > q_pos - window
+    if lk_valid:
+        # keys past the true sequence length are wrapper padding — without
+        # this mask a zero-padded key scores 0 > NEG_INF and soaks up
+        # softmax weight on every real row
+        mask &= k_pos < lk_valid
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -68,11 +74,16 @@ def _kernel(scale: float, causal: bool, window: int, bq: int, bk: int,
                     jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("causal", "window", "lk_valid",
+                                             "bq", "bk", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    lk_valid: int = 0,
                     bq: int = 256, bk: int = 256, interpret: bool = False):
-    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D) -> (B, H, Lq, D)."""
+    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D) -> (B, H, Lq, D).
+
+    ``lk_valid`` (static, 0 = all): the true key length when Lk carries
+    wrapper padding — key positions >= lk_valid are masked out.
+    """
     b, h, lq, d = q.shape
     _, kv, lk, _ = k.shape
     g = h // kv
@@ -83,7 +94,8 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
     qf = q.reshape(b * h, lq, d)
     grid = (b * h, lq // bq, lk // bk)
-    kernel = functools.partial(_kernel, scale, causal, window, bq, bk)
+    kernel = functools.partial(_kernel, scale, causal, window, lk_valid,
+                               bq, bk)
 
     out = pl.pallas_call(
         kernel,

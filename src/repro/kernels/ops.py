@@ -2,8 +2,16 @@
 
 ``use_pallas()`` decides per-backend: real Mosaic lowering on TPU, the
 pure-jnp reference on CPU/GPU (tests exercise the kernels explicitly with
-``interpret=True``).  All wrappers pad shapes to kernel block multiples and
-slice back, so call sites never worry about alignment.
+``force_pallas=True, interpret=True``).  All wrappers pad shapes to kernel
+block multiples and slice back, so call sites never worry about alignment;
+block shapes come from ``kernels.autotune`` (measured on TPU, deterministic
+heuristic elsewhere) instead of hand-picked constants.
+
+Under a data-parallel ``mesh`` the cov wrappers stay on the fused Pallas
+single-pass kernel: the call is wrapped in ``shard_map`` over the mesh's
+data axes, so each DP worker runs the kernel on its local token shard and
+one ``psum`` per triple combines the partial products — no fallback to the
+XLA einsum, which cost an extra read of x/x' per covariance term.
 """
 
 from __future__ import annotations
@@ -12,8 +20,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.cov_accum import cov_accum as _cov_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
@@ -33,26 +42,48 @@ def _pad_dim(x, axis: int, multiple: int):
     return jnp.pad(x, widths), size
 
 
-def lowrank_matmul(x, v, u, *, force_pallas: bool = False,
-                   interpret: bool = False):
-    """y = (x @ v) @ u.  x: (..., n); v: (n, k); u: (k, m)."""
+def lowrank_matmul(x, v, u, *, bias=None, residual=None,
+                   force_pallas: bool = False, interpret: bool = False):
+    """y = (x @ v) @ u (+ bias + residual).  x: (..., n); v: (n, k);
+    u: (k, m); bias: (m,) or (1, m); residual: (..., m) like x's lead dims.
+
+    The epilogue adds run fused inside the kernel's phase B (no extra HBM
+    round-trip of the (T, m) output)."""
     if not (use_pallas() or force_pallas):
-        return ref.lowrank_matmul_ref(x, v, u)
+        y = ref.lowrank_matmul_ref(x, v, u)
+        if bias is not None:
+            y = y + bias.reshape(-1)
+        if residual is not None:
+            y = y + residual
+        return y
     lead = x.shape[:-1]
     xf = x.reshape(-1, x.shape[-1])
-    xf, t0 = _pad_dim(xf, 0, 256)
+    t0 = xf.shape[0]
     # the contraction dim n needs lane alignment like every other dim:
     # zero-padding x's columns and v's rows adds exact zero contributions
     xf, _ = _pad_dim(xf, 1, 128)
     v, _ = _pad_dim(v, 0, 128)
     v, _ = _pad_dim(v, 1, 128)
     u, _ = _pad_dim(u, 0, 128)
-    u, m0 = _pad_dim(u, 1, 256)
-    n = xf.shape[1]
-    bn = 512 if n % 512 == 0 else next(b for b in (384, 256, 128)
-                                       if n % b == 0)
-    y = _lowrank_kernel(xf, v, u, bt=256, bn=min(bn, n),
-                        bm=256, interpret=interpret)
+    u, m0 = _pad_dim(u, 1, 128)
+    tune = autotune.lowrank_blocks(
+        t0, xf.shape[1], v.shape[1], u.shape[1], dtype=xf.dtype,
+        has_bias=bias is not None, has_residual=residual is not None,
+        interpret=interpret)
+    bt, bn, bm = (tune.blocks[kk] for kk in ("bt", "bn", "bm"))
+    xf, _ = _pad_dim(xf, 0, bt)
+    xf, _ = _pad_dim(xf, 1, bn)
+    v, _ = _pad_dim(v, 0, bn)
+    u, _ = _pad_dim(u, 1, bm)
+    bf = rf = None
+    if bias is not None:
+        bf, _ = _pad_dim(bias.reshape(1, -1), 1, u.shape[1])
+    if residual is not None:
+        rf = residual.reshape(-1, m0)
+        rf, _ = _pad_dim(rf, 0, xf.shape[0])
+        rf, _ = _pad_dim(rf, 1, u.shape[1])
+    y = _lowrank_kernel(xf, v, u, bf, rf, bt=bt, bn=bn, bm=bm,
+                        interpret=interpret)
     return y[:t0, :m0].reshape(*lead, m0)
 
 
@@ -65,11 +96,10 @@ def _accumulate(outs, acc, mesh=None):
     ``lax.scan`` with donated carry, so each triple is updated without a
     fresh 3·n² allocation per microbatch.
 
-    ``mesh`` marks accumulate-into under data-parallel sharding: the inputs'
-    token rows are sharded over the mesh's data axes, so each device holds a
-    PARTIAL product.  Constraining the accumulated triple to the replicated
-    ``cov_spec`` makes GSPMD reduce the partials (one n×n psum per update)
-    right here, instead of leaking sharded partial-sums into the solve."""
+    ``mesh`` marks accumulate-into under data-parallel sharding: the triple
+    arriving here is already the psum-reduced global product (see
+    ``_sharded_triple``); constraining it to the replicated ``cov_spec``
+    keeps GSPMD from re-sharding the carry between updates."""
     outs = outs if acc is None else tuple(a + o for a, o in zip(acc, outs))
     if mesh is not None:
         from repro.distributed import sharding as SH
@@ -78,24 +108,88 @@ def _accumulate(outs, acc, mesh=None):
     return outs
 
 
+def _cov_triple(x, xp, *, force_pallas: bool, interpret: bool):
+    """Single-device fused triple on (T, n) token rows (padded + sliced)."""
+    if not (use_pallas() or force_pallas):
+        return ref.cov_accum_ref(x, xp)
+    n0 = x.shape[-1]
+    # lane-align the feature dim: zero columns give exact zero outer
+    # products, so any n (e.g. 80-dim whisper taps) is safe
+    x, _ = _pad_dim(x, 1, 128)
+    xp, _ = _pad_dim(xp, 1, 128)
+    tune = autotune.cov_blocks(x.shape[0], x.shape[1], dtype=x.dtype,
+                               interpret=interpret)
+    bt, bi = tune.blocks["bt"], tune.blocks["bi"]
+    x, _ = _pad_dim(x, 0, bt)
+    xp, _ = _pad_dim(xp, 0, bt)
+    x, _ = _pad_dim(x, 1, bi)
+    xp, _ = _pad_dim(xp, 1, bi)
+    outs = _cov_kernel(x, xp, bi=bi, bt=bt, interpret=interpret)
+    if x.shape[1] != n0:
+        outs = tuple(o[:n0, :n0] for o in outs)
+    return outs
+
+
+def _cov_triple_banked(x, xp, *, force_pallas: bool, interpret: bool):
+    """Expert-bank triple on (E, C, n): vmapped fused kernel per expert."""
+    if not (use_pallas() or force_pallas):
+        return ref.cov_accum_banked_ref(x, xp)
+    n0 = x.shape[-1]
+    x, _ = _pad_dim(x, 2, 128)
+    xp, _ = _pad_dim(xp, 2, 128)
+    tune = autotune.cov_blocks(x.shape[1], x.shape[2], dtype=x.dtype,
+                               interpret=interpret)
+    bt, bi = tune.blocks["bt"], tune.blocks["bi"]
+    x, _ = _pad_dim(x, 1, bt)
+    xp, _ = _pad_dim(xp, 1, bt)
+    x, _ = _pad_dim(x, 2, bi)
+    xp, _ = _pad_dim(xp, 2, bi)
+    fn = functools.partial(_cov_kernel, bi=bi, bt=bt, interpret=interpret)
+    outs = jax.vmap(fn)(x, xp)
+    if x.shape[2] != n0:
+        outs = tuple(o[:, :n0, :n0] for o in outs)
+    return outs
+
+
+def _sharded_triple(local_fn, x, xp, mesh, shard_axis: int):
+    """Run ``local_fn`` (a per-shard fused triple) under ``shard_map`` over
+    the mesh's data axes, sharding ``shard_axis`` of both inputs.
+
+    Each DP worker keeps the fused Pallas single-pass path on its local
+    token shard (padding the shard axis to the DP degree first — zero rows
+    contribute exact zero outer products), and one ``psum`` per triple
+    element combines the partials into the replicated global product."""
+    from repro.distributed import sharding as SH
+    dp = SH.dp_axes(mesh)
+    x, _ = _pad_dim(x, shard_axis, SH.dp_degree(mesh))
+    xp, _ = _pad_dim(xp, shard_axis, SH.dp_degree(mesh))
+    spec_axes = [None] * x.ndim
+    spec_axes[shard_axis] = dp
+    spec = P(*spec_axes)
+
+    def local(xs, xps):
+        return tuple(jax.lax.psum(o, dp) for o in local_fn(xs, xps))
+
+    fn = SH.data_shard_map(local, mesh, in_specs=(spec, spec),
+                           out_specs=(P(), P(), P()))
+    return fn(x, xp)
+
+
 def cov_accum(x, xp, *, acc=None, mesh=None, force_pallas: bool = False,
               interpret: bool = False):
     """(T, n) x2 -> (xx, xxp, xpxp) fp32.  Token padding is exact (zero
     rows).  ``acc`` optionally supplies an existing (xx, xxp, xpxp) triple
-    to accumulate into (returned as acc + products); ``mesh`` replicates the
-    result across a data-parallel mesh (see ``_accumulate``)."""
-    if mesh is not None or not (use_pallas() or force_pallas):
-        # sharded collection always takes the XLA contraction: the fused
-        # Pallas kernel carries no SPMD partitioning rule, so GSPMD would
-        # all-gather the sharded token batch around it — the einsum
-        # partitions into per-device partials + the one psum we want
-        return _accumulate(ref.cov_accum_ref(x, xp), acc, mesh)
+    to accumulate into (returned as acc + products); ``mesh`` runs the fused
+    kernel per DP worker under shard_map and psum-reduces the partials
+    (see ``_sharded_triple``)."""
     n = x.shape[-1]
-    x, _ = _pad_dim(x.reshape(-1, n), 0, 512)
-    xp, _ = _pad_dim(xp.reshape(-1, n), 0, 512)
-    bi = 256 if n % 256 == 0 else n
-    return _accumulate(_cov_kernel(x, xp, bi=bi, bt=512,
-                                   interpret=interpret), acc, mesh)
+    x = x.reshape(-1, n)
+    xp = xp.reshape(-1, n)
+    fn = functools.partial(_cov_triple, force_pallas=force_pallas,
+                           interpret=interpret)
+    if mesh is None:
+        return _accumulate(fn(x, xp), acc)
+    return _accumulate(_sharded_triple(fn, x, xp, mesh, 0), acc, mesh)
 
 
 def cov_accum_banked(x, xp, *, acc=None, mesh=None,
@@ -106,23 +200,34 @@ def cov_accum_banked(x, xp, *, acc=None, mesh=None,
     vmaps the fused single-pass kernel over the expert axis; capacity
     padding is exact (zero-padded slots add zero outer products).  ``acc``
     optionally supplies an existing triple to accumulate into; ``mesh``
-    replicates the result across a data-parallel mesh (and, as in
-    ``cov_accum``, forces the partitionable XLA contraction)."""
-    if mesh is not None or not (use_pallas() or force_pallas):
-        return _accumulate(ref.cov_accum_banked_ref(x, xp), acc, mesh)
-    n = x.shape[-1]
-    x, _ = _pad_dim(x, 1, 512)
-    xp, _ = _pad_dim(xp, 1, 512)
-    bi = 256 if n % 256 == 0 else n
-    fn = functools.partial(_cov_kernel, bi=bi, bt=512, interpret=interpret)
-    return _accumulate(jax.vmap(fn)(x, xp), acc, mesh)
+    shards the capacity axis over the DP workers, each running the fused
+    vmapped kernel on its slots, with one psum per triple element."""
+    fn = functools.partial(_cov_triple_banked, force_pallas=force_pallas,
+                           interpret=interpret)
+    if mesh is None:
+        return _accumulate(fn(x, xp), acc)
+    return _accumulate(_sharded_triple(fn, x, xp, mesh, 1), acc, mesh)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     force_pallas: bool = False, interpret: bool = False):
-    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D)."""
+    """q: (B, H, Lq, D); k/v: (B, KV, Lk, D).  Non-multiple Lq/Lk are
+    padded to the tuned block multiples and sliced back; padded KEY
+    positions are masked inside the kernel (``lk_valid``) so they absorb
+    no softmax weight, and padded query rows are simply sliced away."""
     if not (use_pallas() or force_pallas):
         return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
-    return _flash_kernel(q, k, v, causal=causal, window=window,
-                         bq=min(256, q.shape[2]), bk=min(256, k.shape[2]),
-                         interpret=interpret)
+    b, h, lq0, d = q.shape
+    kv, lk0 = k.shape[1], k.shape[2]
+    tune = autotune.flash_blocks(b, h, kv, lq0, lk0, d, dtype=q.dtype,
+                                 causal=causal, window=window,
+                                 interpret=interpret)
+    bq, bk = tune.blocks["bq"], tune.blocks["bk"]
+    q, _ = _pad_dim(q, 2, bq)
+    k, _ = _pad_dim(k, 2, bk)
+    v, _ = _pad_dim(v, 2, bk)
+    out = _flash_kernel(q, k, v, causal=causal, window=window,
+                        lk_valid=lk0 if k.shape[2] != lk0 else 0,
+                        bq=min(bq, q.shape[2]), bk=min(bk, k.shape[2]),
+                        interpret=interpret)
+    return out[:, :, :lq0, :]

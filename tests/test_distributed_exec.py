@@ -157,6 +157,54 @@ print("OK")
 """)
 
 
+def test_sharded_fused_cov_matches_unsharded_fused():
+    """The SPMD cov path: under ``calib_mesh`` the wrappers shard_map the
+    FUSED Pallas kernel (forced, interpret) over the data axes — per-worker
+    partial triples + one psum — and must match the unsharded fused path to
+    fp32 tolerance, on token counts not divisible by the DP degree and
+    unaligned feature dims.  Covers both the flat and the expert-bank
+    entry points (there is no einsum fallback branch anymore)."""
+    run_child(COMMON + """
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_calib_mesh
+
+mesh = make_calib_mesh()
+assert dict(mesh.shape) == {"data": 8}, mesh
+k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+
+def check(outs, wants, label):
+    for o, w in zip(outs, wants):
+        a, b = np.asarray(o), np.asarray(w)
+        np.testing.assert_allclose(
+            a, b, rtol=2e-4, atol=2e-4 * max(np.abs(b).max(), 1.0),
+            err_msg=label)
+
+# flat: 1000 rows (not divisible by 8), n=100 (not lane-aligned)
+x = jax.random.normal(k1, (1000, 100), jnp.float32)
+xp = x + 0.1 * jax.random.normal(k2, (1000, 100), jnp.float32)
+dp = ops.cov_accum(x, xp, mesh=mesh, force_pallas=True, interpret=True)
+un = ops.cov_accum(x, xp, force_pallas=True, interpret=True)
+check(dp, un, "flat dp-vs-unsharded")
+check(dp, ref.cov_accum_ref(x, xp), "flat dp-vs-ref")
+
+# accumulate-into under the mesh
+acc = tuple(jnp.ones((100, 100), jnp.float32) for _ in range(3))
+dp_acc = ops.cov_accum(x, xp, acc=acc, mesh=mesh,
+                       force_pallas=True, interpret=True)
+check(dp_acc, tuple(a + o for a, o in zip(acc, un)), "flat acc")
+
+# banked: capacity 130 (not divisible by 8), n=72 unaligned
+xb = jax.random.normal(k1, (3, 130, 72), jnp.float32)
+xpb = xb + 0.1 * jax.random.normal(k2, (3, 130, 72), jnp.float32)
+dpb = ops.cov_accum_banked(xb, xpb, mesh=mesh,
+                           force_pallas=True, interpret=True)
+check(dpb, ops.cov_accum_banked(xb, xpb, force_pallas=True,
+                                interpret=True), "banked dp-vs-unsharded")
+check(dpb, ref.cov_accum_banked_ref(xb, xpb), "banked dp-vs-ref")
+print("OK")
+""")
+
+
 def test_sharded_calibration_dp_invariance():
     """CompressConfig.calib_mesh shards stage-1 collection over 8 DP
     workers: covariance triples and final compressed params must match the
