@@ -14,7 +14,8 @@ Top level (all required):
     mode            str ("interpret" | "mosaic")
     rows            [{name: str, us: float >= 0, meta: dict}, ...]  nonempty
     claims          [{name: str, pass: bool, detail: str}, ...] with at
-                    least one claim named ``claim_I6*``
+                    least one ISSUE-numbered claim (name ``claim_I<n>*`` —
+                    e.g. claim_I6 autotune, claim_I7 serving)
 """
 
 from __future__ import annotations
@@ -68,9 +69,9 @@ def validate(doc) -> List[str]:
             if not isinstance(c.get("detail"), str):
                 bad.append(f"claims[{i}].detail: not a string")
         if not any(isinstance(c, dict)
-                   and str(c.get("name", "")).startswith("claim_I6")
+                   and str(c.get("name", "")).startswith("claim_I")
                    for c in claims):
-            bad.append("claims: no claim_I6* entry")
+            bad.append("claims: no claim_I* entry")
     return bad
 
 

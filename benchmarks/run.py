@@ -12,12 +12,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline_report      — §Roofline summary from the dry-run artifacts
   wallclock            — tracked perf trajectory (ISSUE 6): tuned-vs-default
                          kernel wall, stage-1/stage-2 wall, BENCH_<n>.json
+  serving_throughput   — continuous-batching engine under a Poisson trace
+                         (ISSUE 7): tokens/sec + p50/p99, compressed-vs-
+                         dense decode at equal batch, flash-decode kernel
 
 ``--wallclock`` runs ONLY the wall-clock benchmark (with a shorter train
-substrate) and emits its versioned artifact — the CI kernel-bench smoke
-job's entry point:
+substrate); ``--serving`` runs ONLY the serving benchmark.  Both emit the
+versioned BENCH_<n>.json artifact (repo root by default) — the CI smoke
+jobs' entry points:
 
     python benchmarks/run.py --wallclock --out-dir artifacts/
+    python benchmarks/run.py --serving --out-dir artifacts/
 """
 
 from __future__ import annotations
@@ -36,9 +41,11 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--wallclock", action="store_true",
                     help="run only the wall-clock benchmark + artifact")
+    ap.add_argument("--serving", action="store_true",
+                    help="run only the serving-throughput benchmark "
+                         "+ artifact")
     ap.add_argument("--out-dir", default=None,
-                    help="BENCH_<n>.json directory "
-                         "(default: benchmarks/artifacts/)")
+                    help="BENCH_<n>.json directory (default: repo root)")
     ap.add_argument("--steps", type=int, default=None,
                     help="train steps for the substrate model")
     args = ap.parse_args(argv)
@@ -55,10 +62,21 @@ def main(argv=None) -> None:
         print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},"
               "end-to-end")
         return
+    if args.serving:
+        from benchmarks import serving_throughput, wallclock
+        doc = serving_throughput.collect()
+        path = wallclock.emit(doc, args.out_dir)
+        for row in wallclock.summary_rows(doc):
+            print(row)
+        print(f"serving_artifact,0.0,{path}")
+        print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},"
+              "end-to-end")
+        return
 
     from benchmarks import (calibration_size, compression_quality,
                             error_evolution, kernel_bench, memory_speedup,
-                            refine_speed, roofline_report, wallclock)
+                            refine_speed, roofline_report,
+                            serving_throughput, wallclock)
     from benchmarks.common import train_small_model
 
     cfg, params, final_loss = train_small_model(steps=args.steps or 200)
@@ -66,7 +84,7 @@ def main(argv=None) -> None:
     ctx = {"cfg": cfg, "params": params}
     for mod in (compression_quality, error_evolution, calibration_size,
                 refine_speed, memory_speedup, kernel_bench,
-                roofline_report, wallclock):
+                roofline_report, wallclock, serving_throughput):
         for row in mod.run(ctx):
             print(row)
     print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},end-to-end")

@@ -235,9 +235,15 @@ def collect(ctx: Optional[dict] = None, *, steps: int = 60,
 
 
 def emit(doc: dict, out_dir: Optional[str] = None) -> str:
-    """Write the artifact as BENCH_<n>.json (n = 1 + highest existing)."""
+    """Write the artifact as BENCH_<n>.json (n = 1 + highest existing).
+
+    Default directory is the REPO ROOT so the numbered trajectory is
+    committed alongside the code it measures — ``benchmarks/artifacts/``
+    is gitignored, which silently dropped every artifact before ISSUE 7.
+    CI jobs pass an explicit ``out_dir`` for upload staging.
+    """
     out_dir = os.path.normpath(
-        out_dir or os.path.join(os.path.dirname(__file__), "artifacts"))
+        out_dir or os.path.join(os.path.dirname(__file__), ".."))
     os.makedirs(out_dir, exist_ok=True)
     ns = [int(m.group(1)) for m in
           (re.fullmatch(r"BENCH_(\d+)\.json", f)

@@ -326,8 +326,9 @@ def _cache_leaf_spec(kind: str, name: str, shape, mesh: Mesh) -> P:
         if shape[2] % mesh.shape["model"] == 0:
             return _fit(mesh, [first, None, "model", None], shape)
         return _fit(mesh, [first, "model", None, None], shape)
-    if name in ("c", "kr"):
-        # (B, L, r) MLA compressed cache: SEQUENCE-sharded over model.  The
+    if name in ("c", "kr", "lk", "lv"):
+        # (B, L, r) MLA compressed / latent-GQA cache: SEQUENCE-sharded
+        # over model.  The
         # absorbed-decode score einsum contracts r against head-sharded
         # q_eff; r-sharding forces a full-cache all-gather per layer, while
         # L-sharding keeps scores local (softmax reduces with tiny psums).

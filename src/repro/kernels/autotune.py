@@ -59,6 +59,7 @@ _ANCHORS = {
     "cov_accum": {"bt": 512, "bi": 256},
     "lowrank_matmul": {"bt": 256, "bn": 512, "bm": 256},
     "flash_attention": {"bq": 256, "bk": 256},
+    "flash_decode": {"bk": 256},
 }
 
 # candidate lattices (per block dim).  Small on purpose: measurement cost
@@ -69,6 +70,7 @@ _LATTICES = {
     "lowrank_matmul": {"bt": (128, 256, 512), "bn": (128, 256, 512),
                        "bm": (128, 256, 512)},
     "flash_attention": {"bq": (128, 256, 512), "bk": (128, 256, 512)},
+    "flash_decode": {"bk": (128, 256, 512, 1024)},
 }
 
 _LANE = 128          # last-dim tile multiple (fp32 8×128, bf16 16×128)
@@ -299,6 +301,31 @@ def flash_candidates(lq: int, lk: int, d: int,
     return sorted(out, key=lambda c: _prefer("flash_attention", c))
 
 
+def flash_decode_candidates(l: int, d: int, rk: int, rv: int, kv: int,
+                            h: int,
+                            dtype=jnp.float32) -> List[Candidate]:
+    """(bk,) lattice for the factorized flash-decode kernel.  VMEM:
+    double-buffered latent (bk, r_k) + (bk, r_v) tiles and (bk, D/2)
+    rope tables, the resident q/o (H, D) + U factors (KV, r, D), and the
+    fp32 (H, r_v) accumulator + (H, 1) stats scratch."""
+    out = []
+    eb = _bytes(dtype)
+    lat = _LATTICES["flash_decode"]
+    resident = (2 * h * d + kv * (rk + rv) * d) * eb
+    for bk in _pick_valid(l, lat["bk"], 8):
+        vmem = (2 * (bk * rk + bk * rv + bk * d) * eb
+                + resident + (h * rv + 2 * h) * 4)
+        waste = _round_up(l, bk) / l - 1
+        if vmem <= _vmem_budget():
+            out.append(Candidate({"bk": bk}, vmem, waste))
+    if not out:
+        bk = min(lat["bk"])
+        out = [Candidate({"bk": bk},
+                         2 * (bk * rk + bk * rv + bk * d) * eb + resident,
+                         0.0)]
+    return sorted(out, key=lambda c: _prefer("flash_decode", c))
+
+
 # ---------------------------------------------------------------------------
 # measurement
 
@@ -431,3 +458,32 @@ def flash_blocks(b: int, h: int, kv: int, lq: int, lk: int, d: int, *,
                 (q, kx, kx))
 
     return _tune("flash_attention", sig, cands, thunk, mode, interpret)
+
+
+def flash_decode_blocks(b: int, h: int, kv: int, l: int, d: int,
+                        rk: int, rv: int, *, dtype=jnp.float32,
+                        use_rope: bool = True, mode: str = "auto",
+                        interpret: bool = False) -> TuneResult:
+    """Blocks for the factorized flash-decode kernel; ``l`` is the UNPADDED
+    cache length (the caller pads it up to the returned block) and rk/rv
+    the lane-padded latent ranks."""
+    cands = flash_decode_candidates(l, d, rk, rv, kv, h, dtype)
+    sig = (f"b{b}-h{h}-kv{kv}-l{l}-d{d}-rk{rk}-rv{rv}"
+           f"-{jnp.dtype(dtype).name}-r{int(use_rope)}")
+
+    def thunk(c: Candidate):
+        from repro.kernels.flash_decode import flash_decode as kern
+        bk = c.blocks["bk"]
+        lp = _round_up(l, bk)
+        q = jnp.ones((b, h, d), dtype)
+        lkx = jnp.ones((b, lp, rk), dtype)
+        lvx = jnp.ones((b, lp, rv), dtype)
+        uk = jnp.ones((kv, rk, d), dtype)
+        uv = jnp.ones((kv, rv, d), dtype)
+        lengths = jnp.full((b,), l, jnp.int32)
+        cs = jnp.ones((lp, max(d // 2, 1)), dtype)
+        return (lambda *a: kern(*a, use_rope=use_rope, bk=bk,
+                                interpret=interpret),
+                (q, lkx, lvx, uk, uv, lengths, cs, cs))
+
+    return _tune("flash_decode", sig, cands, thunk, mode, interpret)

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import autotune, ref
 from repro.kernels.cov_accum import cov_accum as _cov_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.flash_decode import flash_decode as _flash_decode_kernel
 from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
 
 
@@ -231,3 +232,43 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                         bq=min(bq, q.shape[2]), bk=min(bk, k.shape[2]),
                         interpret=interpret)
     return out[:, :, :lq0, :]
+
+
+def flash_decode(q, lk, lv, uk, uv, lengths, cos, sin, *, rope: bool = True,
+                 force_pallas: bool = False, interpret: bool = False):
+    """One decode step against the factorized latent KV cache.
+
+    q: (B, H, D) current-step queries (already RoPE'd); lk/lv: (B, L,
+    r_k / r_v) latent caches; uk/uv: (r_k, KV·D) / (r_v, KV·D) — the "u"
+    factor leaves exactly as stored in params; lengths: (B,) int32 live
+    prefix per slot; cos/sin: (L, D//2) rope tables at absolute positions.
+    Returns (B, H, D).
+
+    Latent ranks are lane-padded with zero columns (exact: zero latent
+    dims contribute nothing through U); L is padded to the tuned block and
+    masked via ``lengths``.  The head dim stays TRUE-sized so the
+    in-kernel RoPE rotate-half pairing is preserved.
+    """
+    b, h, d = q.shape
+    kv = uk.shape[-1] // d
+    uk3 = uk.reshape(uk.shape[0], kv, d).transpose(1, 0, 2)  # (KV, r_k, D)
+    uv3 = uv.reshape(uv.shape[0], kv, d).transpose(1, 0, 2)
+    if not (use_pallas() or force_pallas):
+        return ref.flash_decode_ref(q, lk, lv, uk3, uv3, lengths, cos, sin,
+                                    rope=rope)
+    l0 = lk.shape[1]
+    lk, _ = _pad_dim(lk, 2, 128)
+    lv, _ = _pad_dim(lv, 2, 128)
+    uk3, _ = _pad_dim(uk3, 1, 128)
+    uv3, _ = _pad_dim(uv3, 1, 128)
+    tune = autotune.flash_decode_blocks(
+        b, h, kv, l0, d, lk.shape[-1], lv.shape[-1], dtype=q.dtype,
+        use_rope=rope, interpret=interpret)
+    bk = tune.blocks["bk"]
+    lk, _ = _pad_dim(lk, 1, bk)
+    lv, _ = _pad_dim(lv, 1, bk)
+    cos, _ = _pad_dim(cos, 0, bk)
+    sin, _ = _pad_dim(sin, 0, bk)
+    return _flash_decode_kernel(q, lk, lv, uk3, uv3, lengths, cos, sin,
+                                use_rope=rope, bk=min(bk, lk.shape[1]),
+                                interpret=interpret)

@@ -51,3 +51,35 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_decode_ref(q, lk, lv, uk, uv, lengths, cos, sin, *,
+                     rope: bool = True):
+    """Factorized-latent decode oracle, mirroring the kernel's math.
+
+    q: (B, H, D); lk/lv: (B, L, r_k / r_v); uk/uv: (KV, r_k/r_v, D);
+    lengths: (B,) live prefix per slot; cos/sin: (L, D//2).  Keys are
+    up-projected and RoPE'd at absolute positions; the value side stays in
+    latent space until the U_v epilogue (the same absorption the kernel
+    performs), all in fp32.
+    """
+    b, h, d = q.shape
+    l = lk.shape[1]
+    kv = uk.shape[0]
+    g = h // kv
+    k = jnp.einsum("blr,krd->blkd", lk.astype(jnp.float32),
+                   uk.astype(jnp.float32))
+    if rope:
+        half = d // 2
+        c = cos.astype(jnp.float32)[None, :, None, :]
+        s_ = sin.astype(jnp.float32)[None, :, None, :]
+        k1, k2 = k[..., :half], k[..., half:]
+        k = jnp.concatenate([k1 * c - k2 * s_, k2 * c + k1 * s_], axis=-1)
+    k = jnp.repeat(k, g, axis=2)                              # (B, L, H, D)
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32), k) / math.sqrt(d)
+    valid = jnp.arange(l)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", p, lv.astype(jnp.float32))
+    uv_rep = jnp.repeat(uv.astype(jnp.float32), g, axis=0)    # (H, r_v, D)
+    return jnp.einsum("bhr,hrd->bhd", ctx, uv_rep).astype(q.dtype)

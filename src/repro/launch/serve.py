@@ -1,12 +1,42 @@
-"""Batched serving driver for (optionally AA-SVD-compressed) models.
+"""Serving engine for (optionally AA-SVD-compressed) models.
 
-Continuous-batching-lite: requests arrive with prompts, get packed into a
-fixed decode batch, prefilled, and stepped together; finished slots are
-refilled.  The compressed model is a drop-in: factorized params from
-``core.pipeline.compress_model`` (or ``core.factorized.factorize_params``
-structures filled from a checkpoint) run through the exact same serve_step —
-the compression ratio shows up as smaller weights, smaller KV-projection
-FLOPs and a smaller factorized-cache footprint (App. B.3).
+Two entry points share one jitted step family:
+
+``Server`` — fixed-batch convenience frontend: one ``generate`` call
+prefills every prompt together and decodes lock-step.  Requests are padded
+to the advertised slot count (it is an error to submit more), and the
+decode position starts at the TRUE prefill length — modality frontends
+that prepend extra embeddings (vision patches) occupy cache positions
+before the text tokens.
+
+``ContinuousBatchingServer`` — the real engine.  Scheduler contract:
+
+* The KV cache is allocated ONCE for ``slots`` sequences of ``max_len``
+  positions.  Layout is chosen per sub-block by ``models.model.init_cache``:
+  attention blocks whose k/v projections are AA-SVD-factorized store the
+  rank-r latent per token ({"lk","lv"}), up-projected in-kernel by the
+  fused flash-decode kernel; everything else keeps dense {"k","v"}
+  (``cache_layout="dense"`` forces the dense layout everywhere).
+* ``run(requests)`` drives a host-side loop: requests are admitted into
+  free slots once their ``arrival`` offset has elapsed, prefilled
+  individually (``cache_slot_take`` -> prefill -> ``cache_slot_put``), and
+  then decoded as ONE batched step over all slots with a per-slot position
+  vector — finishing one sequence never restarts the others.
+* Prefill is decoupled from decode: ``prefill_chunk > 0`` streams the
+  prompt through a fixed-width chunked-attention prefill (logits identical
+  to whole-prompt prefill); width-padding retraces per chunk width, not
+  per prompt length.  Architectures that cannot resume mid-sequence or
+  tolerate right-padding (SSM, hybrid, sliding-window ring caches) are
+  prefilled whole at exact length; requests carrying modality extras
+  (patches / frames) are prefilled whole in a single chunk.
+* Parked (empty) slots ride along in the decode batch at position 0;
+  every position they touch is either overwritten by the next admission's
+  prefill or masked by the per-slot attention length, so they never leak
+  into live sequences.
+* Per-request ``arrival`` / ``admitted`` / ``first_token`` / ``done``
+  timestamps (seconds from ``run`` start) are returned for latency
+  accounting; ``decode_step_times`` keeps the per-step decode wall times
+  of the last run for throughput accounting.
 
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --ratio 0.6
 """
@@ -14,11 +44,13 @@ FLOPs and a smaller factorized-cache footprint (App. B.3).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
-from typing import List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.core import CompressConfig, compress_model
@@ -28,7 +60,28 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 
 
+def _pad_batch(x, n: int):
+    """Pad axis 0 of ``x`` with zeros up to ``n`` rows."""
+    pad = n - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+def _prefill_extra_len(cfg) -> int:
+    """Cache positions written by prefill BEYOND the text tokens.
+
+    Vision frontends concatenate ``num_patches`` patch embeddings before
+    the tokens, so the decoder cache holds patches + prompt.  Audio frames
+    go to the encoder (cross-attn cache only) — decoder self-attn length
+    stays at the text length.
+    """
+    return cfg.num_patches if cfg.frontend == "vision" else 0
+
+
 class Server:
+    """Fixed-batch serving frontend (one prefill + lock-step decode)."""
+
     def __init__(self, cfg, params, *, max_len: int = 256, batch: int = 4,
                  mesh=None):
         self.cfg = cfg
@@ -41,30 +94,200 @@ class Server:
 
     def generate(self, prompts: jnp.ndarray, *, steps: int = 32,
                  extras: Optional[dict] = None) -> jnp.ndarray:
-        """prompts: (batch, prompt_len) int32 -> (batch, steps) generated."""
+        """prompts: (b, prompt_len) int32, b <= batch -> (b, steps)."""
         b, plen = prompts.shape
-        if plen + steps > self.max_len:
+        if b > self.batch:
+            raise ValueError(
+                f"got {b} prompts but the server advertises batch="
+                f"{self.batch} decode slots; split the request or raise "
+                "Server(batch=...)")
+        prefill_len = plen + _prefill_extra_len(self.cfg)
+        if prefill_len + steps > self.max_len:
             # the decode cache holds max_len positions; past it the write
             # indices leave the buffer and the attention window silently
             # corrupts (dynamic-update clamping) — fail loudly instead.
-            # The contract reserves a slot for every generated position
-            # (the final token's own slot is never written back, so the
-            # bound is deliberately conservative by one).
+            # The bound counts every position prefill writes, including
+            # frontend extras (vision patches) that precede the tokens.
             raise ValueError(
-                f"prompt_len ({plen}) + steps ({steps}) = {plen + steps} "
-                f"exceeds the cache capacity max_len ({self.max_len}); "
-                "raise Server(max_len=...) or generate fewer steps")
-        cache = M.init_cache(self.cfg, b, self.max_len)
-        batch = {"tokens": prompts, **(extras or {})}
+                f"prefill length ({prefill_len}) + steps ({steps}) = "
+                f"{prefill_len + steps} exceeds the cache capacity max_len "
+                f"({self.max_len}); raise Server(max_len=...) or generate "
+                "fewer steps")
+        prompts = _pad_batch(prompts, self.batch)
+        extras = {k: _pad_batch(jnp.asarray(v), self.batch)
+                  for k, v in (extras or {}).items()}
+        cache = M.init_cache(self.cfg, self.batch, self.max_len)
+        batch = {"tokens": prompts, **extras}
         next_tok, cache = self._prefill(self.params, batch, cache)
         out = [next_tok[:, None]]
-        pos = plen
+        pos = prefill_len
         tok = next_tok[:, None]
         for _ in range(steps - 1):
             tok, cache = self._serve(self.params, cache, tok, pos)
             out.append(tok)
             pos += 1
-        return jnp.concatenate(out, axis=1)
+        return jnp.concatenate(out, axis=1)[:b]
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request for :class:`ContinuousBatchingServer`.
+
+    ``arrival`` is the offset (seconds from ``run`` start) at which the
+    request becomes visible to the scheduler — 0 means immediately.
+    """
+
+    rid: int
+    prompt: np.ndarray               # (prompt_len,) int32
+    steps: int
+    extras: Optional[dict] = None    # modality inputs, leading axis 1
+    arrival: float = 0.0
+
+
+def _bucket(n: int, lo: int = 16) -> int:
+    """Next power-of-two width >= n (floor ``lo``) — bounds retraces."""
+    w = lo
+    while w < n:
+        w *= 2
+    return w
+
+
+class ContinuousBatchingServer:
+    """Slot-level continuous batching over one shared decode cache."""
+
+    def __init__(self, cfg, params, *, max_len: int = 256, slots: int = 4,
+                 prefill_chunk: int = 0, mesh=None,
+                 cache_layout: str = "auto"):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.slots = slots
+        self.prefill_chunk = prefill_chunk
+        # SSM state and ring caches can neither resume mid-sequence nor
+        # tolerate right-padded prompts -> exact-length whole prefill.
+        self._exact = (cfg.family in ("ssm", "hybrid")
+                       or cfg.attention == "sliding_mix")
+        mesh = mesh or make_host_mesh()
+        self._decode = jax.jit(S.make_serve_step(cfg, mesh),
+                               donate_argnums=(1,))
+        self._pre_whole = jax.jit(S.make_slot_prefill_step(cfg, mesh,
+                                                           chunked=False))
+        self._pre_chunk = jax.jit(S.make_slot_prefill_step(cfg, mesh,
+                                                           chunked=True))
+        self._cache_params = None if cache_layout == "dense" else params
+        self.decode_step_times: List[float] = []
+
+    # ------------------------------------------------------------------
+    def _admit(self, req: Request, cache, slot: int):
+        """Prefill ``req`` into ``slot``.  Returns (first token, cache,
+        prefill length)."""
+        cfg = self.cfg
+        prompt = np.asarray(req.prompt, np.int32)
+        plen = int(prompt.shape[0])
+        extra = _prefill_extra_len(cfg)
+        total = plen + extra
+        if total + req.steps > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prefill length ({total}) + steps "
+                f"({req.steps}) exceeds max_len ({self.max_len})")
+        slot_cache = M.cache_slot_take(cfg, cache, slot)
+        extras = {k: jnp.asarray(v) for k, v in (req.extras or {}).items()}
+        chunk = self.prefill_chunk
+        if self._exact or extras or chunk <= 0:
+            if self._exact:
+                toks = prompt[None]              # exact length, no padding
+                last_idx = total - 1
+            else:
+                w = min(_bucket(plen), self.max_len - extra)
+                toks = np.zeros((1, w), np.int32)
+                toks[0, :plen] = prompt
+                last_idx = extra + plen - 1
+            tok, slot_cache = self._pre_whole(
+                self.params, {"tokens": jnp.asarray(toks), **extras},
+                slot_cache, jnp.int32(0), jnp.int32(last_idx))
+        else:
+            padded = -(-plen // chunk) * chunk
+            buf = np.zeros((padded,), np.int32)
+            buf[:plen] = prompt
+            tok = None
+            for c0 in range(0, padded, chunk):
+                last = c0 + chunk >= padded
+                last_idx = (plen - 1 - c0) if last else (chunk - 1)
+                tok, slot_cache = self._pre_chunk(
+                    self.params, {"tokens": jnp.asarray(buf[None,
+                                                            c0:c0 + chunk])},
+                    slot_cache, jnp.int32(c0), jnp.int32(last_idx))
+        cache = M.cache_slot_put(cfg, cache, slot_cache, slot)
+        return int(np.asarray(tok)[0]), cache, total
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request]) -> Dict[int, Dict[str, Any]]:
+        """Serve every request; returns {rid: {tokens, arrival, admitted,
+        first_token, done}} with times in seconds from run start."""
+        cfg = self.cfg
+        queue = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        cache = M.init_cache(cfg, self.slots, self.max_len,
+                             params=self._cache_params)
+        tokens_np = np.zeros((self.slots, 1), np.int32)
+        pos_np = np.zeros((self.slots,), np.int32)
+        active: List[Optional[dict]] = [None] * self.slots
+        results: Dict[int, Dict[str, Any]] = {}
+        self.decode_step_times = []
+        start = time.monotonic()
+        now = lambda: time.monotonic() - start  # noqa: E731
+        qi = 0
+
+        def finish(slot):
+            st = active[slot]
+            results[st["req"].rid] = {
+                "tokens": np.asarray(st["out"], np.int32),
+                "arrival": st["req"].arrival, "admitted": st["admitted"],
+                "first_token": st["first_token"], "done": now()}
+            active[slot] = None
+            pos_np[slot] = 0
+            tokens_np[slot, 0] = 0
+
+        while qi < len(queue) or any(s is not None for s in active):
+            # ---- admission: refill every free slot whose request arrived
+            for slot in range(self.slots):
+                if active[slot] is not None or qi >= len(queue):
+                    continue
+                if queue[qi].arrival > now():
+                    continue
+                req = queue[qi]
+                qi += 1
+                t_admit = now()
+                tok0, cache, total = self._admit(req, cache, slot)
+                active[slot] = {"req": req, "out": [tok0],
+                                "remaining": req.steps - 1,
+                                "admitted": t_admit, "first_token": now()}
+                tokens_np[slot, 0] = tok0
+                pos_np[slot] = total
+                if active[slot]["remaining"] <= 0:
+                    finish(slot)
+            if not any(s is not None for s in active):
+                if qi < len(queue):      # idle until the next arrival
+                    time.sleep(max(0.0, queue[qi].arrival - now()))
+                continue
+            # ---- one batched decode step over ALL slots (parked slots sit
+            # at position 0; their writes are overwritten or masked)
+            t_step = time.monotonic()
+            tok_dev, cache = self._decode(self.params, cache,
+                                          jnp.asarray(tokens_np),
+                                          jnp.asarray(pos_np))
+            tok_host = np.asarray(tok_dev)
+            self.decode_step_times.append(time.monotonic() - t_step)
+            for slot in range(self.slots):
+                st = active[slot]
+                if st is None:
+                    continue
+                st["out"].append(int(tok_host[slot, 0]))
+                tokens_np[slot, 0] = tok_host[slot, 0]
+                pos_np[slot] += 1
+                st["remaining"] -= 1
+                if st["remaining"] <= 0:
+                    finish(slot)
+        return results
 
 
 def main():
@@ -76,6 +299,8 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--engine", action="store_true",
+                    help="route through the continuous-batching engine")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -91,8 +316,7 @@ def main():
         print(f"[serve] compressed to ratio {args.ratio}; "
               f"{len(report['units'])} blocks")
 
-    server = Server(cfg, params, max_len=args.prompt_len + args.steps + 8,
-                    batch=args.batch)
+    max_len = args.prompt_len + _prefill_extra_len(cfg) + args.steps + 8
     prompts = synthetic_tokens(key, args.batch, args.prompt_len,
                                cfg.vocab_size)
     extras = {}
@@ -103,7 +327,20 @@ def main():
         extras["frames"] = 0.02 * jax.random.normal(
             key, (args.batch, cfg.encoder_seq_len, cfg.d_model))
     t0 = time.time()
-    toks = server.generate(prompts, steps=args.steps, extras=extras)
+    if args.engine:
+        server = ContinuousBatchingServer(cfg, params, max_len=max_len,
+                                          slots=args.batch)
+        reqs = [Request(rid=i, prompt=np.asarray(prompts[i]),
+                        steps=args.steps,
+                        extras={k: v[i:i + 1] for k, v in extras.items()}
+                        or None)
+                for i in range(args.batch)]
+        results = server.run(reqs)
+        toks = jnp.stack([jnp.asarray(results[i]["tokens"])
+                          for i in range(args.batch)])
+    else:
+        server = Server(cfg, params, max_len=max_len, batch=args.batch)
+        toks = server.generate(prompts, steps=args.steps, extras=extras)
     dt = time.time() - t0
     print(f"[serve] generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.steps / dt:.1f} tok/s)")

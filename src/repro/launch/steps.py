@@ -160,6 +160,32 @@ def make_prefill_step(cfg, mesh):
     return prefill_step
 
 
+def make_slot_prefill_step(cfg, mesh, *, chunked: bool = False):
+    """Prefill ONE scheduler slot (batch=1 cache pytree) at a traced start
+    position.
+
+    Returns ``slot_prefill_step(params, batch, cache, pos, last_idx)`` ->
+    (first greedy token (1, 1) int32, cache).  ``pos`` is the absolute
+    position of batch["tokens"][:, 0] in the slot's cache (0 for whole
+    prefill, the chunk offset for chunked prefill); ``last_idx`` selects
+    which row of the chunk holds the real last prompt token (prompts are
+    right-padded to a fixed chunk width so the step retraces only per
+    width, not per prompt length).  With ``chunked=True`` attention runs
+    against the whole cache via the incremental path — ValueError at trace
+    time for sub-blocks that cannot resume mid-sequence (SSM, local ring).
+    """
+    constrain = _make_constrain(mesh)
+
+    def slot_prefill_step(params, batch, cache, pos, last_idx):
+        with SH.use_mesh(mesh, mode="use", cfg=cfg):
+            logits, cache = M.prefill(params, cfg, batch, cache, pos=pos,
+                                      chunked=chunked, last_idx=last_idx,
+                                      constrain=constrain)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return slot_prefill_step
+
+
 def make_serve_step(cfg, mesh):
     """One greedy decode step: token at ``pos`` in, token at pos+1 out."""
     constrain = _make_constrain(mesh)

@@ -33,13 +33,16 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     """Online-softmax attention.
 
     q: (B, Lq, H, D); k/v: (B, Lk, KV, D).  ``q_offset`` is the absolute
-    position of q[0] (decode: the current length).  ``window``>0 restricts
-    keys to (q_pos - window, q_pos].  Returns (B, Lq, H, D) in q.dtype.
+    position of q[0] (decode: the current length) — a scalar, or a (B,)
+    vector for slot-batched decode where every sequence sits at its own
+    position (continuous batching).  ``window``>0 restricts keys to
+    (q_pos - window, q_pos].  Returns (B, Lq, H, D) in q.dtype.
     """
     b, lq, h, d = q.shape
     _, lk, kv, _ = k.shape
     g = h // kv
     scale = 1.0 / math.sqrt(d)
+    per_slot = jnp.ndim(q_offset) == 1
 
     chunk = min(chunk, lk)
     n_chunks = -(-lk // chunk)
@@ -56,7 +59,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     # for the PV GEMM; running (m, l, acc) stats stay fp32.  The body is
     # jax.checkpoint'd so backward recomputes per-chunk probabilities rather
     # than stacking (n_chunks × B × H × Lq × C) residuals.
-    q_pos = q_offset + jnp.arange(lq)
+    q_pos = (q_offset[:, None] if per_slot else q_offset) + jnp.arange(lq)
 
     def body(carry, idx):
         # dynamic-slice chunk reads from the ORIGINAL (B, L, KV, D) layout —
@@ -76,13 +79,15 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                        preferred_element_type=jnp.float32) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
-        mask = jnp.ones((lq, chunk), bool)
+        # mask shape: (Lq, C) for scalar q_offset, (B, Lq, C) per-slot
+        mask = jnp.ones(q_pos.shape + (chunk,), bool)
         if causal:
-            mask = mask & (key_pos[None, :] <= q_pos[:, None])
+            mask = mask & (key_pos <= q_pos[..., None])
         if window:
-            mask = mask & (key_pos[None, :] > q_pos[:, None] - window)
-        mask = mask & (key_pos < lk)[None, :]
-        s = jnp.where(mask[None, None], s, NEG_INF)
+            mask = mask & (key_pos > q_pos[..., None] - window)
+        mask = mask & (key_pos < lk)
+        s = jnp.where(mask[:, None] if per_slot else mask[None, None],
+                      s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
@@ -153,15 +158,47 @@ def gqa_prefill(p, x, cfg, cos, sin, *, causal=True, window: int = 0,
     return out
 
 
+def _cache_write(cache, new, pos):
+    """Write one decode step into a (B, Lmax, ...) cache.
+
+    ``new`` is (B, 1, ...); ``pos`` is a scalar (all slots at the same
+    position — the classic fixed-batch path) or a (B,) vector of per-slot
+    positions (continuous batching: each slot sits at its own length)."""
+    if jnp.ndim(pos) == 1:
+        b = cache.shape[0]
+        return cache.at[jnp.arange(b), pos].set(new[:, 0].astype(cache.dtype))
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, new.astype(cache.dtype), pos, axis=1)
+
+
 def gqa_decode(p, x, cache_k, cache_v, pos, cfg, cos, sin, *,
                window: int = 0, chunk: int = 1024, rope: bool = True):
-    """One-token decode.  x: (B, 1, d); caches (B, Lmax, KV, D); pos scalar."""
+    """One-token decode.  x: (B, 1, d); caches (B, Lmax, KV, D); pos is a
+    scalar or a per-slot (B,) vector."""
     q, k, v = _project_qkv(p, x, cfg, cos, sin, rope=rope)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    cache_k = _cache_write(cache_k, k, pos)
+    cache_v = _cache_write(cache_v, v, pos)
     o = _decode_attention(q, cache_k, cache_v, pos, cfg, window=window,
                           chunk=chunk)
     return L.linear(p["wo"], o.reshape(*x.shape[:2], -1)), cache_k, cache_v
+
+
+def gqa_prefill_cached(p, x, cache_k, cache_v, start, cfg, cos, sin, *,
+                       chunk: int = 1024, rope: bool = True):
+    """Chunked prefill: write this chunk's k/v into the dense cache at
+    ``start`` and flash-attend against the WHOLE cache with absolute
+    positions.  Earlier chunks are visible; unwritten future positions are
+    causally masked (key_pos > q_pos), so chunk-by-chunk prefill produces
+    the same logits as whole-prompt prefill."""
+    q, k, v = _project_qkv(p, x, cfg, cos, sin, rope=rope)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), start, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), start, axis=1)
+    o = flash_attention(q, cache_k, cache_v, causal=True, q_offset=start,
+                        chunk=chunk, softcap=cfg.attn_logit_softcap)
+    out = L.linear(p["wo"], o.reshape(*x.shape[:2], -1))
+    return out, cache_k, cache_v
 
 
 def _decode_attention(q, cache_k, cache_v, pos, cfg, *, window: int = 0,
@@ -180,6 +217,7 @@ def _decode_attention(q, cache_k, cache_v, pos, cfg, *, window: int = 0,
         if (n_model > 1 and cfg.num_kv_heads % n_model != 0
                 and cache_k.shape[1] % n_model == 0
                 and cache_k.shape[0] % dp_size == 0 and q.shape[1] == 1
+                and jnp.ndim(pos) == 0
                 and window == 0 and not cfg.attn_logit_softcap):
             return _seqpar_flash_decode(q, cache_k, cache_v, pos, mesh,
                                         chunk=chunk)
@@ -284,18 +322,25 @@ def ring_decode(p, x, cache_k, cache_v, pos, cfg, cos, sin, *, window: int):
     w = cache_k.shape[1]
     q, k, v = _project_qkv(p, x, cfg, cos, sin)
     slot = pos % w
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    cache_k = _cache_write(cache_k, k, slot)
+    cache_v = _cache_write(cache_v, v, slot)
 
     slots = jnp.arange(w)
-    key_pos = pos - jnp.mod(pos - slots, w)        # absolute position per slot
-    valid = (key_pos >= 0) & (key_pos > pos - window)
+    if jnp.ndim(pos) == 1:
+        posb = pos[:, None]                        # (B, 1) per-slot positions
+        key_pos = posb - jnp.mod(posb - slots[None], w)
+        valid = (key_pos >= 0) & (key_pos > posb - window)   # (B, W)
+        vmask = valid[:, None, None, None, :]
+    else:
+        key_pos = pos - jnp.mod(pos - slots, w)    # absolute position per slot
+        valid = (key_pos >= 0) & (key_pos > pos - window)
+        vmask = valid[None, None, None, None]
 
     qg = q.reshape(b, 1, kv, g, hd).astype(jnp.float32) / math.sqrt(hd)
     s = jnp.einsum("bqkgd,bwkd->bkgqw", qg, cache_k.astype(jnp.float32))
     if cfg.attn_logit_softcap:
         s = jnp.tanh(s / cfg.attn_logit_softcap) * cfg.attn_logit_softcap
-    s = jnp.where(valid[None, None, None, None], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqw,bwkd->bqkgd", pattn, cache_v.astype(jnp.float32))
     o = o.reshape(b, 1, h * hd).astype(x.dtype)
@@ -403,23 +448,19 @@ def _pad_last(x, to):
     return x if pad == 0 else jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
 
 
-def mla_decode(p, x, cache_c, cache_kr, pos, cfg, cos, sin):
-    """Absorbed decode: score directly against the compressed cache.
+def _mla_absorbed_attend(p, q_nope, q_rope, cache_c, cache_kr, q_pos, cfg):
+    """Attend against the compressed cache with W_uk/W_uv absorbed.
 
-    cache_c: (B, Lmax, r); cache_kr: (B, Lmax, rope_dim); x: (B, 1, d).
-    The W_uk absorption folds key decompression into the query; W_uv
-    absorption folds value decompression into the output projection — the
-    per-step FLOPs scale with r, not h*head_dim, and the cache stays
-    compressed (the whole point of MLA).
+    q_nope/q_rope: (B, Lq, H, ·); caches (B, Lmax, r / rope_dim).  ``q_pos``
+    is (1|B, Lq) absolute query positions — (1, 1) for classic decode,
+    (B, 1) for per-slot decode, (1, Lq) for chunked prefill.  The W_uk
+    absorption folds key decompression into the query; W_uv absorption
+    folds value decompression into the output projection — FLOPs scale
+    with r, not h*head_dim, and the cache stays compressed (the whole
+    point of MLA).  Returns (B, Lq, H, v_head_dim) fp32.
     """
-    b, _, _ = x.shape
     h, m = cfg.num_heads, cfg.mla
     r = m.kv_lora_rank
-    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)     # (B,1,H,nope/rope)
-    c_t, kr_t = _mla_ckv(p, x, cfg, cos, sin)
-    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_t.astype(cache_c.dtype), pos, axis=1)
-    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_t.astype(cache_kr.dtype), pos, axis=1)
-
     wk_b = p["wk_b"]["w"] if "w" in p["wk_b"] else p["wk_b"]["v"] @ p["wk_b"]["u"]
     wk_b = wk_b.reshape(r, h, m.qk_nope_head_dim)
     q_eff = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
@@ -428,12 +469,139 @@ def mla_decode(p, x, cache_c, cache_kr, pos, cfg, cos, sin):
     s = (jnp.einsum("bqhr,blr->bhql", q_eff, cache_c.astype(jnp.float32))
          + jnp.einsum("bqhd,bld->bhql", q_rope.astype(jnp.float32),
                       cache_kr.astype(jnp.float32))) * scale
-    valid = jnp.arange(cache_c.shape[1]) <= pos
-    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    valid = jnp.arange(cache_c.shape[1])[None, None] <= q_pos[..., None]
+    s = jnp.where(valid[:, None], s, NEG_INF)        # (1|B, 1, Lq, Lmax)
     pattn = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhql,blr->bqhr", pattn, cache_c.astype(jnp.float32))
     wv_b = p["wv_b"]["w"] if "w" in p["wv_b"] else p["wv_b"]["v"] @ p["wv_b"]["u"]
     wv_b = wv_b.reshape(r, h, m.v_head_dim)
-    o = jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b.astype(jnp.float32))  # absorb W_uv
+    return jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b.astype(jnp.float32))
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, cfg, cos, sin):
+    """Absorbed decode: score directly against the compressed cache.
+
+    cache_c: (B, Lmax, r); cache_kr: (B, Lmax, rope_dim); x: (B, 1, d);
+    pos is a scalar or a per-slot (B,) vector.
+    """
+    b, _, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)     # (B,1,H,nope/rope)
+    c_t, kr_t = _mla_ckv(p, x, cfg, cos, sin)
+    cache_c = _cache_write(cache_c, c_t, pos)
+    cache_kr = _cache_write(cache_kr, kr_t, pos)
+    q_pos = (pos[:, None] if jnp.ndim(pos) == 1
+             else jnp.asarray(pos)[None, None])
+    o = _mla_absorbed_attend(p, q_nope, q_rope, cache_c, cache_kr, q_pos, cfg)
     out = L.linear(p["wo"], o.reshape(b, 1, -1).astype(x.dtype))
     return out, cache_c, cache_kr
+
+
+def mla_prefill_cached(p, x, cache_c, cache_kr, start, cfg, cos, sin):
+    """Chunked prefill for MLA: write this chunk's compressed kv into the
+    cache at ``start``, then run the absorbed path against the whole cache
+    (unwritten future positions causally masked)."""
+    b, l, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, cfg, cos, sin)
+    c, kr = _mla_ckv(p, x, cfg, cos, sin)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c.astype(cache_c.dtype), start, axis=1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, kr.astype(cache_kr.dtype), start, axis=1)
+    q_pos = (start + jnp.arange(l))[None]             # (1, Lq)
+    o = _mla_absorbed_attend(p, q_nope, q_rope, cache_c, cache_kr, q_pos, cfg)
+    out = L.linear(p["wo"], o.reshape(b, l, -1).astype(x.dtype))
+    return out, cache_c, cache_kr
+
+
+# ---------------------------------------------------------------------------
+# factorized latent KV cache (AA-SVD serving path)
+#
+# When the k/v projections are factorized (w = v @ u, bias-free), the
+# per-token cache state the model actually needs is the rank-r latent
+# l = x @ v — the MLA trick applied to ordinary GQA.  Decode stores only
+# (B, Lmax, r_k) + (B, Lmax, r_v) and the flash-decode kernel up-projects
+# keys in-kernel (U_k) while keeping the value accumulator in latent space
+# (U_v applied once per head in the epilogue), so the compression ratio
+# shows up directly as cache bytes AND decode FLOPs.
+
+
+def latent_ranks(p):
+    """(rank_k, rank_v) when BOTH k/v projections are bias-free factorized
+    pairs — the layout the latent KV cache requires; else ``None``.
+
+    Works on plain and scan-stacked (leading (n,) axis) param leaves.
+    """
+    def rank(w):
+        if isinstance(w, dict) and "w" not in w and "b" not in w and "u" in w:
+            return int(w["v"].shape[-1])
+        return None
+    if not isinstance(p, dict):
+        return None
+    rk, rv = rank(p.get("wk")), rank(p.get("wv"))
+    if rk is None or rv is None:
+        return None
+    return rk, rv
+
+
+def _latent_kv(p, x):
+    """Down-projected kv latents x @ V — the only per-token state the
+    factorized cache stores; U is applied inside the decode kernel."""
+    lk = x @ p["wk"]["v"].astype(x.dtype)
+    lv = x @ p["wv"]["v"].astype(x.dtype)
+    return lk, lv
+
+
+def gqa_prefill_latent(p, x, cache_lk, cache_lv, start, cfg, cos, sin, *,
+                       theta: float, rope: bool = True, chunk: int = 1024):
+    """Prefill into the latent cache: write this chunk's rank-r latents at
+    ``start``, up-project the whole cache once, and flash-attend with
+    absolute-position masking.  Used for whole prompts (start=0) and for
+    chunked prefill alike."""
+    b, l, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(b, l, h, hd)
+    if rope:
+        q = L.apply_rope(q, cos, sin)
+    lk_c, lv_c = _latent_kv(p, x)
+    cache_lk = jax.lax.dynamic_update_slice_in_dim(
+        cache_lk, lk_c.astype(cache_lk.dtype), start, axis=1)
+    cache_lv = jax.lax.dynamic_update_slice_in_dim(
+        cache_lv, lv_c.astype(cache_lv.dtype), start, axis=1)
+    lmax = cache_lk.shape[1]
+    k_all = (cache_lk @ p["wk"]["u"].astype(cache_lk.dtype)
+             ).reshape(b, lmax, kv, hd)
+    v_all = (cache_lv @ p["wv"]["u"].astype(cache_lv.dtype)
+             ).reshape(b, lmax, kv, hd)
+    if rope:
+        cos_all, sin_all = L.rope_table(jnp.arange(lmax), hd, theta)
+        k_all = L.apply_rope(k_all, cos_all, sin_all)
+    o = flash_attention(q, k_all, v_all, causal=True, q_offset=start,
+                        chunk=chunk)
+    return (L.linear(p["wo"], o.reshape(b, l, -1)), cache_lk, cache_lv)
+
+
+def gqa_decode_latent(p, x, cache_lk, cache_lv, pos, cfg, cos, sin, *,
+                      theta: float, rope: bool = True):
+    """One-token decode against the factorized latent cache.
+
+    x: (B, 1, d); caches (B, Lmax, r_k/r_v); pos scalar or per-slot (B,).
+    Dispatches to ``kernels.ops.flash_decode`` (Pallas on TPU, reference
+    einsums elsewhere) with per-slot lengths = pos + 1.
+    """
+    from repro.kernels import ops as KO
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.head_dim
+    q = L.linear(p["wq"], x).reshape(b, 1, h, hd)
+    if rope:
+        q = L.apply_rope(q, cos, sin)
+    lk_t, lv_t = _latent_kv(p, x)
+    cache_lk = _cache_write(cache_lk, lk_t, pos)
+    cache_lv = _cache_write(cache_lv, lv_t, pos)
+    lengths = jnp.broadcast_to(jnp.asarray(pos) + 1, (b,)).astype(jnp.int32)
+    lmax = cache_lk.shape[1]
+    cos_all, sin_all = L.rope_table(jnp.arange(lmax), hd, theta)
+    o = KO.flash_decode(q[:, 0], cache_lk, cache_lv,
+                        p["wk"]["u"], p["wv"]["u"], lengths,
+                        cos_all, sin_all, rope=rope)
+    return (L.linear(p["wo"], o.reshape(b, 1, h * hd).astype(x.dtype)),
+            cache_lk, cache_lv)

@@ -137,6 +137,12 @@ def _window(kind, cfg) -> int:
     return cfg.sliding_window if kind == "attn_local" else 0
 
 
+def _theta(kind, cfg) -> float:
+    if kind == "attn_global" and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
 # ---------------------------------------------------------------------------
 # forward (train / plain forward, no cache)
 
@@ -181,7 +187,29 @@ def apply_sub_block(kind: str, p, x, cfg, ctx):
 # caches
 
 
-def init_sub_cache(kind: str, cfg, batch: int, max_len: int, dtype):
+def latent_layout(kind: str, params, cfg) -> Optional[Tuple[int, int]]:
+    """(rank_k, rank_v) when this sub-block can store the factorized rank-r
+    kv latent instead of dense k/v — requires bias-free factorized wk AND
+    wv (``A.latent_ranks``), no post-projection qk-norm (applied after the
+    up-projection, so it can't be absorbed), no logit softcap (the
+    flash-decode kernel doesn't implement it), and an absolute-position
+    (non-ring, non-MLA) cache."""
+    if params is None or cfg.qk_norm or cfg.attn_logit_softcap:
+        return None
+    if kind in ("mamba1", "mamba2", "attn_local", "enc_attn"):
+        return None
+    if kind.startswith("mla"):
+        return None
+    return A.latent_ranks(params.get("attn")) if isinstance(params, dict) \
+        else None
+
+
+def init_sub_cache(kind: str, cfg, batch: int, max_len: int, dtype,
+                   params=None):
+    """Zero cache for one sub-block.  When ``params`` (the sub-block's param
+    dict) is given and the kv projections are factorized, attention caches
+    use the latent {"lk", "lv"} layout (rank-r per token) instead of dense
+    {"k", "v"} — the AA-SVD serving-path footprint win."""
     kv, hd = cfg.num_kv_heads, cfg.head_dim
     if kind in ("mamba1", "mamba2"):
         init = S.mamba1_init_state if kind == "mamba1" else S.mamba2_init_state
@@ -194,15 +222,19 @@ def init_sub_cache(kind: str, cfg, batch: int, max_len: int, dtype):
         m = cfg.mla
         return {"c": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
                 "kr": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
-    if kind == "dec_attn":
-        return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
-                "v": jnp.zeros((batch, max_len, kv, hd), dtype),
-                "xk": jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype),
-                "xv": jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)}
     if kind == "enc_attn":
         return {}
-    return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
-            "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+    ranks = latent_layout(kind, params, cfg)
+    if ranks is not None:
+        base = {"lk": jnp.zeros((batch, max_len, ranks[0]), dtype),
+                "lv": jnp.zeros((batch, max_len, ranks[1]), dtype)}
+    else:
+        base = {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
+                "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+    if kind == "dec_attn":
+        base["xk"] = jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)
+        base["xv"] = jnp.zeros((batch, cfg.encoder_seq_len, kv, hd), dtype)
+    return base
 
 
 # ---------------------------------------------------------------------------
@@ -222,10 +254,20 @@ def _write_ring(cache, new, start):
 
 
 def prefill_sub_block(kind: str, p, x, cache, cfg, ctx):
-    """Forward over the prompt, filling the cache.  start pos = ctx['pos']."""
+    """Forward over the prompt, filling the cache.  start pos = ctx['pos'].
+
+    ``ctx['chunked']`` switches attention kinds to the cached-attention
+    path: this chunk's keys are written into the cache first, then queries
+    attend against the WHOLE cache with absolute-position masking, so a
+    prompt can be prefilled chunk by chunk with logits equal to whole-
+    prompt prefill.  SSM and ring (sliding-window) blocks don't support it.
+    """
     start = ctx.get("pos", 0)
+    chunked = bool(ctx.get("chunked"))
     zero = jnp.zeros((), jnp.float32)
     if kind in ("mamba1", "mamba2"):
+        if chunked:
+            raise ValueError("chunked prefill unsupported for SSM blocks")
         fwd = S.mamba1_forward if kind == "mamba1" else S.mamba2_forward
         y, state = fwd(p["mixer"], L.apply_norm(p["ln"], x, eps=cfg.norm_eps),
                        cfg, return_state=True)
@@ -234,13 +276,29 @@ def prefill_sub_block(kind: str, p, x, cache, cfg, ctx):
     cos, sin = _tables(kind, ctx)
     h = L.apply_norm(p["ln1"], x, eps=cfg.norm_eps)
     if kind.startswith("mla"):
-        attn_out, (c, kr) = A.mla_prefill(p["attn"], h, cfg, cos, sin,
-                                          return_cache=True)
         cache = dict(cache)
-        cache["c"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["c"], c.astype(cache["c"].dtype), start, axis=1)
-        cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["kr"], kr.astype(cache["kr"].dtype), start, axis=1)
+        if chunked:
+            attn_out, cache["c"], cache["kr"] = A.mla_prefill_cached(
+                p["attn"], h, cache["c"], cache["kr"], start, cfg, cos, sin)
+        else:
+            attn_out, (c, kr) = A.mla_prefill(p["attn"], h, cfg, cos, sin,
+                                              return_cache=True)
+            cache["c"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["c"], c.astype(cache["c"].dtype), start, axis=1)
+            cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), start, axis=1)
+    elif "lk" in cache:
+        cache = dict(cache)
+        attn_out, cache["lk"], cache["lv"] = A.gqa_prefill_latent(
+            p["attn"], h, cache["lk"], cache["lv"], start, cfg, cos, sin,
+            theta=_theta(kind, cfg), rope=kind != "dec_attn")
+    elif chunked:
+        if kind == "attn_local":
+            raise ValueError("chunked prefill unsupported for ring caches")
+        cache = dict(cache)
+        attn_out, cache["k"], cache["v"] = A.gqa_prefill_cached(
+            p["attn"], h, cache["k"], cache["v"], start, cfg, cos, sin,
+            rope=kind != "dec_attn")
     else:
         attn_out, (k, v) = A.gqa_prefill(p["attn"], h, cfg, cos, sin,
                                          window=_window(kind, cfg),
@@ -292,6 +350,10 @@ def decode_sub_block(kind: str, p, x, cache, cfg, ctx):
         attn_out, cache["k"], cache["v"] = A.ring_decode(
             p["attn"], h, cache["k"], cache["v"], pos, cfg, cos, sin,
             window=cfg.sliding_window)
+    elif "lk" in cache:
+        attn_out, cache["lk"], cache["lv"] = A.gqa_decode_latent(
+            p["attn"], h, cache["lk"], cache["lv"], pos, cfg, cos, sin,
+            theta=_theta(kind, cfg), rope=kind != "dec_attn")
     else:
         attn_out, cache["k"], cache["v"] = A.gqa_decode(
             p["attn"], h, cache["k"], cache["v"], pos, cfg, cos, sin,

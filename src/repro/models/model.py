@@ -206,19 +206,60 @@ def logits_from_hidden(params, cfg, hidden):
 # cache
 
 
-def init_cache(cfg, batch: int, max_len: int) -> PyTree:
+def init_cache(cfg, batch: int, max_len: int, *,
+               params: Optional[PyTree] = None) -> PyTree:
+    """Zero decode cache.  When ``params`` is given (real arrays or
+    eval_shape structs), attention sub-blocks whose kv projections are
+    factorized get the latent {"lk", "lv"} layout — rank-r floats per token
+    instead of num_kv_heads*head_dim — which the flash-decode kernel
+    up-projects in-kernel.  Without ``params`` the layout is always dense
+    (back-compatible)."""
     dtype = jnp.dtype(cfg.dtype)
     cache = []
-    for st in B.stage_program(cfg):
+    stage_params = params.get("stages") if params is not None else None
+    for si, st in enumerate(B.stage_program(cfg)):
         per_kind = []
-        for kind in st.kinds:
-            c = B.init_sub_cache(kind, cfg, batch, max_len, dtype)
+        for ki, kind in enumerate(st.kinds):
+            p = None
+            if params is not None:
+                p = (params.get("shared", {}).get(kind)
+                     if kind in B.SHARED_KINDS else stage_params[si][ki])
+            c = B.init_sub_cache(kind, cfg, batch, max_len, dtype, params=p)
             if st.scan and st.n > 1:
                 c = jax.tree.map(
                     lambda x: jnp.zeros((st.n,) + x.shape, x.dtype), c)
             per_kind.append(c)
         cache.append(per_kind)
     return cache
+
+
+def cache_slot_take(cfg, cache, slot) -> PyTree:
+    """Extract ONE scheduler slot's cache as a batch=1 cache pytree.
+
+    Scanned stages stack their cache leaves on a leading layer axis, so the
+    batch axis is 1 there and 0 on unrolled leaves.  ``slot`` may be traced
+    (one jit covers every slot)."""
+    out = []
+    for st, per_kind in zip(B.stage_program(cfg), cache):
+        axis = 1 if (st.scan and st.n > 1) else 0
+        out.append([jax.tree.map(
+            lambda x, a=axis: jax.lax.dynamic_slice_in_dim(x, slot, 1,
+                                                           axis=a), c)
+            for c in per_kind])
+    return out
+
+
+def cache_slot_put(cfg, cache, slot_cache, slot) -> PyTree:
+    """Write a batch=1 slot cache back into slot ``slot`` of the full cache
+    (inverse of :func:`cache_slot_take`)."""
+    out = []
+    for st, per_kind, per_new in zip(B.stage_program(cfg), cache, slot_cache):
+        axis = 1 if (st.scan and st.n > 1) else 0
+        out.append([jax.tree.map(
+            lambda buf, upd, a=axis: jax.lax.dynamic_update_slice_in_dim(
+                buf, upd.astype(buf.dtype), slot, axis=a), c, cn)
+            for c, cn in zip(per_kind, per_new)])
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -279,12 +320,22 @@ def _run_stage_cached(stage: B.Stage, stage_params, shared, x, stage_cache,
     return x, new_cache, aux
 
 
-def prefill(params, cfg, batch, cache, *, pos: int = 0, constrain=None):
-    """Run the prompt, fill caches.  Returns (last-token logits, cache)."""
+def prefill(params, cfg, batch, cache, *, pos: int = 0,
+            chunked: bool = False, last_idx=None, constrain=None):
+    """Run the prompt, fill caches.  Returns (last-token logits, cache).
+
+    ``pos`` is the absolute position of batch["tokens"][:, 0] (may be
+    traced).  ``chunked=True`` attends against the whole cache with
+    absolute-position masking so a prompt can be prefilled in chunks
+    (unsupported for SSM/ring blocks).  ``last_idx`` (traced scalar) picks
+    the logits row — needed when the prompt is right-padded to a chunk
+    multiple; defaults to the last row."""
     x = _embed_inputs(params, cfg, batch)
     l = x.shape[1]
     ctx = make_ctx(cfg, pos + jnp.arange(l), constrain=constrain)
     ctx["pos"] = pos
+    if chunked:
+        ctx["chunked"] = True
     if cfg.family == "encdec":
         ctx["enc_out"] = _run_encoder(params, cfg, batch["frames"], False)
         x = x + sinusoid_positions(pos + jnp.arange(l),
@@ -296,20 +347,28 @@ def prefill(params, cfg, batch, cache, *, pos: int = 0, constrain=None):
                                     cfg, ctx, B.prefill_sub_block)
         new_cache.append(c)
     hidden = L.apply_norm(params["final_norm"], x, eps=cfg.norm_eps)
-    logits = logits_from_hidden(params, cfg, hidden[:, -1:])[:, 0]
+    if last_idx is None:
+        last = hidden[:, -1:]
+    else:
+        last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1, axis=1)
+    logits = logits_from_hidden(params, cfg, last)[:, 0]
     return logits, new_cache
 
 
 def decode_step(params, cfg, cache, tokens, pos, *, constrain=None):
     """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (0-based
-    absolute position of this token).  Returns (logits (B, V), new cache)."""
+    absolute position of this token) or a per-slot (B,) vector when every
+    scheduler slot sits at its own length.  Returns (logits (B, V), cache)."""
     dtype = jnp.dtype(cfg.dtype)
     x = L.embed(params["embed"], tokens, dtype)
-    positions = jnp.atleast_1d(pos)
+    per_slot = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_slot else jnp.atleast_1d(pos)
     ctx = make_ctx(cfg, positions, constrain=constrain)
     ctx["pos"] = pos
     if cfg.family == "encdec":
-        x = x + sinusoid_positions(positions, cfg.d_model).astype(dtype)[None]
+        se = sinusoid_positions(jnp.reshape(positions, (-1,)),
+                                cfg.d_model).astype(dtype)
+        x = x + (se[:, None] if per_slot else se[None])
     x = ctx["constrain"](x)
 
     def dec(kind, p, x, c, cfg, ctx):

@@ -1,0 +1,263 @@
+"""Serving path: decode-position correctness, batch contract, the
+continuous-batching engine, and the factorized-KV flash-decode kernel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.factorized import factorize_params
+from repro.models import model as M
+
+
+def _greedy_reference(cfg, params, prompt, steps, extras, max_len):
+    """Teacher-forced oracle: re-prefill prompt + generated-so-far each
+    step.  Position bookkeeping is implicit in whole-prompt prefill, so
+    this is immune to decode-position bugs."""
+    toks = [int(t) for t in np.asarray(prompt)]
+    out = []
+    prefill = jax.jit(lambda p, b, c: M.prefill(p, cfg, b, c))
+    for _ in range(steps):
+        cache = M.init_cache(cfg, 1, max_len)
+        batch = {"tokens": jnp.asarray([toks], jnp.int32), **extras}
+        logits, _ = prefill(params, batch, cache)
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        toks.append(nxt)
+    return np.asarray(out, np.int32)
+
+
+class TestDecodePositionRegression:
+    def test_vision_decode_position(self):
+        """Vision prefill writes num_patches extra cache positions before
+        the tokens; decode must start at plen + num_patches.  The old
+        ``pos = plen`` logic overwrote the cache mid-prompt — this test
+        fails against it."""
+        from repro.launch.serve import Server
+        cfg = get_smoke_config("phi-3-vision-4.2b").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        prompt = jax.random.randint(key, (10,), 0, cfg.vocab_size)
+        patches = 0.02 * jax.random.normal(
+            key, (1, cfg.num_patches, cfg.d_model))
+        steps = 6
+        want = _greedy_reference(cfg, params, prompt, steps,
+                                 {"patches": patches}, max_len=64)
+        srv = Server(cfg, params, max_len=64, batch=1)
+        got = np.asarray(srv.generate(prompt[None], steps=steps,
+                                      extras={"patches": patches}))[0]
+        np.testing.assert_array_equal(got, want)
+
+    def test_whisper_decode_position(self):
+        """Audio frames fill the encoder cross-attn cache only — decoder
+        self-attn prefill length stays at plen.  Parity guards against
+        over-correcting the vision fix."""
+        from repro.launch.serve import Server
+        cfg = get_smoke_config("whisper-base").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        prompt = jax.random.randint(key, (8,), 0, cfg.vocab_size)
+        frames = 0.02 * jax.random.normal(
+            key, (1, cfg.encoder_seq_len, cfg.d_model))
+        steps = 5
+        want = _greedy_reference(cfg, params, prompt, steps,
+                                 {"frames": frames}, max_len=48)
+        srv = Server(cfg, params, max_len=48, batch=1)
+        got = np.asarray(srv.generate(prompt[None], steps=steps,
+                                      extras={"frames": frames}))[0]
+        np.testing.assert_array_equal(got, want)
+
+    def test_vision_capacity_guard_counts_patches(self):
+        """The max_len guard must count the patch positions prefill writes:
+        plen + steps fits but patches + plen + steps does not."""
+        from repro.launch.serve import Server
+        cfg = get_smoke_config("phi-3-vision-4.2b").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        key = jax.random.PRNGKey(1)
+        prompts = jax.random.randint(key, (1, 10), 0, cfg.vocab_size)
+        patches = 0.02 * jax.random.normal(
+            key, (1, cfg.num_patches, cfg.d_model))
+        srv = Server(cfg, params, max_len=30, batch=1)
+        assert cfg.num_patches + 10 + 13 > 30 >= 10 + 13
+        with pytest.raises(ValueError, match="max_len"):
+            srv.generate(prompts, steps=13, extras={"patches": patches})
+
+
+class TestBatchContract:
+    def _server(self, batch):
+        from repro.launch.serve import Server
+        cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, Server(cfg, params, max_len=48, batch=batch)
+
+    def test_rejects_oversized_batch(self):
+        cfg, srv = self._server(batch=2)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 8), 0,
+                                     cfg.vocab_size)
+        with pytest.raises(ValueError, match="batch"):
+            srv.generate(prompts, steps=4)
+
+    def test_pads_undersized_batch(self):
+        """b < batch is padded to the slot count and sliced back — row i of
+        a partial batch matches a full-batch generate of the same prompts."""
+        cfg, srv = self._server(batch=4)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                     cfg.vocab_size)
+        full = np.asarray(srv.generate(prompts, steps=5))
+        part = srv.generate(prompts[:2], steps=5)
+        assert part.shape == (2, 5)
+        np.testing.assert_array_equal(np.asarray(part), full[:2])
+
+
+class TestContinuousBatching:
+    def _setup(self, arch="llama-7b", ratio=None):
+        cfg = get_smoke_config(arch).replace(dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        if ratio is not None:
+            params = factorize_params(params, cfg, ratio=ratio)
+        return cfg, params
+
+    def test_slot_refill_preserves_state_fuzz(self):
+        """Seeded fuzz over arrival orders / lengths: every request decoded
+        through the shared-slot engine matches its single-request
+        generation — finished-slot refills never corrupt neighbours."""
+        from repro.launch.serve import (ContinuousBatchingServer, Request,
+                                        Server)
+        cfg, params = self._setup(ratio=0.5)
+        rng = np.random.default_rng(0)
+        single = Server(cfg, params, max_len=64, batch=1)
+        for seed in range(3):
+            order = rng.permutation(6)
+            reqs = []
+            for rid in order:
+                plen = int(rng.integers(4, 14))
+                steps = int(rng.integers(1, 9))
+                prompt = rng.integers(0, cfg.vocab_size, size=(plen,),
+                                      dtype=np.int32)
+                reqs.append(Request(rid=int(rid), prompt=prompt,
+                                    steps=steps))
+            eng = ContinuousBatchingServer(cfg, params, max_len=64, slots=2)
+            results = eng.run(reqs)
+            assert sorted(results) == sorted(r.rid for r in reqs)
+            for r in reqs:
+                want = np.asarray(single.generate(
+                    jnp.asarray(r.prompt)[None], steps=r.steps))[0]
+                np.testing.assert_array_equal(
+                    results[r.rid]["tokens"], want,
+                    err_msg=f"seed {seed} rid {r.rid}")
+
+    def test_chunked_prefill_matches_whole(self):
+        """Chunk-by-chunk prefill produces the same logits as whole-prompt
+        prefill — dense cache and factorized latent cache."""
+        for ratio in (None, 0.5):
+            cfg, params = self._setup(ratio=ratio)
+            prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0,
+                                        cfg.vocab_size)
+            cache = M.init_cache(cfg, 1, 32, params=params)
+            whole, _ = M.prefill(params, cfg, {"tokens": prompt}, cache)
+            cache = M.init_cache(cfg, 1, 32, params=params)
+            _, cache = M.prefill(params, cfg, {"tokens": prompt[:, :4]},
+                                 cache, pos=0, chunked=True)
+            _, cache = M.prefill(params, cfg, {"tokens": prompt[:, 4:8]},
+                                 cache, pos=4, chunked=True)
+            chunked, _ = M.prefill(params, cfg, {"tokens": prompt[:, 8:]},
+                                   cache, pos=8, chunked=True)
+            np.testing.assert_allclose(np.asarray(chunked),
+                                       np.asarray(whole), atol=2e-4,
+                                       rtol=2e-4)
+
+    def test_latent_cache_matches_dense_decode(self):
+        """Factorized-cache decode (in-kernel up-projection) matches the
+        dense-cache decode of the SAME factorized params."""
+        from repro.launch.serve import ContinuousBatchingServer, Request
+        cfg, params = self._setup(ratio=0.5)
+        layouts = M.init_cache(cfg, 1, 32, params=params)
+        assert any("lk" in c for st in layouts for c in st
+                   if isinstance(c, dict)), "latent layout not engaged"
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(3), (10,), 0,
+                               cfg.vocab_size))
+        outs = {}
+        for layout in ("auto", "dense"):
+            eng = ContinuousBatchingServer(cfg, params, max_len=48, slots=1,
+                                           cache_layout=layout)
+            res = eng.run([Request(rid=0, prompt=prompt, steps=8)])
+            outs[layout] = res[0]["tokens"]
+        np.testing.assert_array_equal(outs["auto"], outs["dense"])
+
+    def test_poisson_arrivals_and_timestamps(self):
+        """Requests arriving over time are admitted in order; timestamps
+        are monotone per request."""
+        from repro.launch.serve import ContinuousBatchingServer, Request
+        cfg, params = self._setup()
+        rng = np.random.default_rng(1)
+        arrivals = np.cumsum(rng.exponential(0.01, size=4))
+        reqs = [Request(rid=i, prompt=rng.integers(
+                    0, cfg.vocab_size, size=(6,), dtype=np.int32),
+                        steps=4, arrival=float(arrivals[i]))
+                for i in range(4)]
+        eng = ContinuousBatchingServer(cfg, params, max_len=32, slots=2)
+        results = eng.run(reqs)
+        assert len(results) == 4
+        for i in range(4):
+            r = results[i]
+            assert r["tokens"].shape == (4,)
+            assert (r["arrival"] <= r["admitted"] <= r["first_token"]
+                    <= r["done"])
+        assert len(eng.decode_step_times) >= 4
+
+
+class TestFlashDecodeKernel:
+    def _case(self, b, h, kv, d, l, rk, rv, seed=0):
+        rng = np.random.default_rng(seed)
+        f = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+        q = f(b, h, d)
+        lk, lv = f(b, l, rk), f(b, l, rv)
+        uk = f(kv, rk, d) * 0.2
+        uv = f(kv, rv, d) * 0.2
+        lengths = jnp.asarray(rng.integers(1, l + 1, size=(b,)), jnp.int32)
+        cos, sin = f(l, d // 2), f(l, d // 2)
+        return q, lk, lv, uk, uv, lengths, cos, sin
+
+    @pytest.mark.parametrize("shape", [
+        (2, 6, 2, 24, 40, 20, 12),    # unaligned head dim + ranks, GQA
+        (1, 4, 4, 32, 64, 16, 16),    # MHA, aligned
+        (3, 8, 2, 16, 48, 8, 24),     # asymmetric k/v ranks
+    ])
+    def test_kernel_matches_ref_interpret(self, shape):
+        from repro.kernels import ref
+        from repro.kernels.flash_decode import flash_decode
+        args = self._case(*shape)
+        want = ref.flash_decode_ref(*args)
+        got = flash_decode(*args, bk=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_ops_wrapper_pads_and_dispatches(self):
+        """The ops wrapper takes the (R, KV*D) param layout, lane-pads the
+        ranks and the L axis, and matches the reference on both the CPU
+        and the interpret-mode Pallas path."""
+        from repro.kernels import ops as KO, ref
+        b, h, kv, d, l, rk, rv = 2, 6, 2, 24, 40, 20, 12
+        q, lk, lv, uk, uv, lengths, cos, sin = self._case(
+            b, h, kv, d, l, rk, rv, seed=7)
+        uk2 = jnp.transpose(uk, (1, 0, 2)).reshape(rk, kv * d)
+        uv2 = jnp.transpose(uv, (1, 0, 2)).reshape(rv, kv * d)
+        want = ref.flash_decode_ref(q, lk, lv, uk, uv, lengths, cos, sin)
+        cpu = KO.flash_decode(q, lk, lv, uk2, uv2, lengths, cos, sin)
+        np.testing.assert_allclose(np.asarray(cpu), np.asarray(want),
+                                   atol=1e-6, rtol=1e-6)
+        pal = KO.flash_decode(q, lk, lv, uk2, uv2, lengths, cos, sin,
+                              force_pallas=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(pal), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_norope_path(self):
+        from repro.kernels import ref
+        from repro.kernels.flash_decode import flash_decode
+        args = self._case(2, 4, 2, 16, 32, 8, 8, seed=3)
+        want = ref.flash_decode_ref(*args, rope=False)
+        got = flash_decode(*args, use_rope=False, bk=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
