@@ -1,0 +1,119 @@
+"""repro-check: the repo-native static analysis layer.
+
+Three passes, each encoding invariants this repo has already paid to
+learn at runtime (see ``README.md`` in this package for the rule
+catalog and the allowlist syntax):
+
+1. **dispatch** (``analysis.dispatch``) — AST lint for dispatch hygiene:
+   host syncs in traced bodies or hot loops, ``lru_cache``d jit factories
+   with ambient cache keys, donated-buffer reuse, prints in hot paths,
+   blanket excepts.
+2. **kernel contracts** (``analysis.contracts`` driving
+   ``kernels.contracts``) — abstract-eval of every autotune candidate for
+   every registered Pallas kernel: alignment, VMEM fit, grid/BlockSpec
+   consistency, expected output shapes.  No hardware required.
+3. **retrace sentinel** (``analysis.retrace`` + ``analysis.
+   pytest_plugin``) — trace counts per memoized jit entry point, enforced
+   against ``trace_budgets.json``.
+
+CLI: ``python -m repro.analysis [paths...]`` (default: the installed
+``repro`` package source) — exit 0 iff the repo is clean.
+
+This ``__init__`` stays import-light: ``core`` modules import
+``repro.analysis.retrace`` at module scope, so importing the package must
+not pull jax or the kernels back in.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+__all__ = ["Finding", "run", "iter_py_files", "default_root"]
+
+
+def default_root() -> str:
+    """The ``repro`` package source tree (what the CLI checks)."""
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = [d for d in dirnames
+                               if d not in ("__pycache__",)]
+                out.extend(os.path.join(dirpath, f)
+                           for f in sorted(filenames)
+                           if f.endswith(".py"))
+        elif p.endswith(".py"):
+            out.append(p)
+    return sorted(set(out))
+
+
+def _check_budget_file(path: str) -> List[Finding]:
+    import json
+
+    from repro.analysis.retrace import ENTRY_POINTS
+    try:
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+    except (OSError, ValueError) as e:
+        return [Finding("trace-budget-file", path, 0,
+                        f"unreadable budget file: {e}")]
+    out: List[Finding] = []
+    workloads = data.get("workloads")
+    if not isinstance(workloads, dict) or not workloads:
+        return [Finding("trace-budget-file", path, 0,
+                        'budget file needs a non-empty "workloads" map')]
+    for wname, budgets in sorted(workloads.items()):
+        if not isinstance(budgets, dict):
+            out.append(Finding("trace-budget-file", path, 0,
+                               f"workload {wname!r} is not a map"))
+            continue
+        for key, cap in sorted(budgets.items()):
+            if key not in ENTRY_POINTS:
+                out.append(Finding(
+                    "trace-budget-file", path, 0,
+                    f"workload {wname!r} budgets unknown entry point "
+                    f"{key!r} — register it in retrace.ENTRY_POINTS"))
+            if not isinstance(cap, int) or cap < 0:
+                out.append(Finding(
+                    "trace-budget-file", path, 0,
+                    f"workload {wname!r}: budget for {key!r} must be a "
+                    f"non-negative int, got {cap!r}"))
+    return out
+
+
+def run(paths: Optional[Sequence[str]] = None, *,
+        kernel_contracts: bool = True) -> List[Finding]:
+    """Run every static pass; returns all findings (empty = clean).
+
+    ``paths``: files/dirs for the AST passes (default: the repro source
+    tree).  ``kernel_contracts=False`` skips the (jax-importing) contract
+    pass — the AST passes stay dependency-free.
+    """
+    from repro.analysis import dispatch, retrace, shard_specs
+
+    findings: List[Finding] = []
+    files = iter_py_files(list(paths) if paths else [default_root()])
+    for f in files:
+        findings.extend(dispatch.check_file(f))
+        findings.extend(shard_specs.check_file(f))
+    findings.extend(_check_budget_file(retrace.BUDGET_FILE))
+    if kernel_contracts:
+        from repro.analysis.contracts import check_kernel_contracts
+        from repro.distributed import sharding as SH
+        findings.extend(check_kernel_contracts())
+        # the AST pass hardcodes the mesh axes (it must not import jax);
+        # fail loudly if the live mesh ever grows an axis it doesn't know
+        live = getattr(SH, "AXIS_NAMES", ("pod", "data", "model"))
+        if set(live) - shard_specs.MESH_AXES:
+            findings.append(Finding(
+                "bad-mesh-axis", "src/repro/analysis/shard_specs.py", 0,
+                f"live mesh axes {sorted(live)} exceed the checker's "
+                f"MESH_AXES {sorted(shard_specs.MESH_AXES)} — update it"))
+    return findings

@@ -1,0 +1,45 @@
+"""CLI: ``python -m repro.analysis [paths...]``.
+
+Runs every static pass over the given files/directories (default: the
+installed ``repro`` package source) and prints one line per finding::
+
+    src/repro/core/refine.py:310: [host-sync-loop] float() on a ...
+
+Exit status: 0 clean, 1 findings, 2 usage error.  ``--no-contracts``
+skips the kernel-contract pass (the only one that imports jax) for fast
+editor/pre-commit loops on the AST rules alone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro-check: dispatch hygiene, kernel contracts, "
+                    "shard specs, trace budgets")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs for the AST passes "
+                         "(default: the repro package source)")
+    ap.add_argument("--no-contracts", action="store_true",
+                    help="skip the kernel-contract abstract-eval pass")
+    args = ap.parse_args(argv)
+
+    findings = run(args.paths or None,
+                   kernel_contracts=not args.no_contracts)
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    if findings:
+        print(f"repro-check: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("repro-check: clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""Kernel-contract pass: abstract-eval every autotune candidate.
+
+Drives ``kernels.contracts.CONTRACTS`` (declared next to the kernels)
+entirely on the host — no accelerator, no Mosaic lowering:
+
+* ``contract-registry``      — ``ops.REGISTERED_KERNELS``, ``CONTRACTS``,
+  ``autotune._LATTICES`` and ``autotune._ANCHORS`` must agree: every
+  registered wrapper resolves to a contract, every contract has a lattice
+  + anchor, and nothing is orphaned.
+* ``contract-alignment``     — every candidate block dim is a multiple of
+  its contract's tile requirement (8 sublane / 128 lane).
+* ``contract-vmem``          — every candidate's modeled double-buffered
+  working set fits the autotuner VMEM budget.
+* ``contract-waste``         — a candidate may not more than double the
+  padded work unless it is the dimension-floor fallback (sole survivor).
+* ``contract-abstract-eval`` — ``jax.eval_shape`` of the real kernel
+  under the wrapper's padding must succeed (``pallas_call`` validates
+  grid / BlockSpec / index-map consistency at bind time) and produce
+  exactly the output shapes the wrapper slices.
+
+Findings anchor to ``kernels/contracts.py`` — the contract is the code
+under review; the message names the kernel, probe, and candidate.
+"""
+
+from __future__ import annotations
+
+import traceback
+from typing import Dict, List
+
+from repro.analysis.findings import Finding
+
+_PATH = "src/repro/kernels/contracts.py"
+
+
+def _fmt_probe(probe: Dict[str, int]) -> str:
+    return "(" + ", ".join(f"{k}={v}" for k, v in sorted(probe.items())) \
+        + ")"
+
+
+def _fmt_blocks(blocks: Dict[str, int]) -> str:
+    return "{" + ", ".join(f"{k}:{v}" for k, v in sorted(blocks.items())) \
+        + "}"
+
+
+def _check_registry(out: List[Finding]) -> None:
+    from repro.kernels import autotune, ops
+    from repro.kernels.contracts import CONTRACTS
+    lattices, anchors = set(autotune._LATTICES), set(autotune._ANCHORS)
+    contracts = set(CONTRACTS)
+    for name in sorted(lattices - contracts):
+        out.append(Finding(
+            "contract-registry", _PATH, 0,
+            f"autotune lattice {name!r} has no KernelContract — declare "
+            "one in kernels/contracts.py"))
+    for name in sorted(contracts - lattices):
+        out.append(Finding(
+            "contract-registry", _PATH, 0,
+            f"contract {name!r} has no autotune lattice"))
+    for name in sorted(lattices ^ anchors):
+        out.append(Finding(
+            "contract-registry", _PATH, 0,
+            f"kernel {name!r} present in only one of _LATTICES/_ANCHORS"))
+    for wrapper, cname in sorted(ops.REGISTERED_KERNELS.items()):
+        if not callable(getattr(ops, wrapper, None)):
+            out.append(Finding(
+                "contract-registry", _PATH, 0,
+                f"REGISTERED_KERNELS names missing ops wrapper "
+                f"{wrapper!r}"))
+        if cname not in contracts:
+            out.append(Finding(
+                "contract-registry", _PATH, 0,
+                f"wrapper {wrapper!r} registered against unknown "
+                f"contract {cname!r}"))
+    covered = set(ops.REGISTERED_KERNELS.values())
+    for name in sorted(contracts - covered):
+        out.append(Finding(
+            "contract-registry", _PATH, 0,
+            f"contract {name!r} reached by no registered wrapper"))
+
+
+def _shapes(tree) -> tuple:
+    import jax
+    return tuple((tuple(x.shape), str(x.dtype))
+                 for x in jax.tree.leaves(tree))
+
+
+def check_contract(contract, *, budget: int = None,
+                   max_waste: float = None) -> List[Finding]:
+    """All findings for one KernelContract across its probes/candidates."""
+    from repro.kernels import autotune
+    budget = autotune._vmem_budget() if budget is None else budget
+    if max_waste is None:
+        # the lattice guarantees <= _MAX_WASTE padding PER DIMENSION
+        # (_pick_valid); the combined bound therefore compounds across
+        # the contract's block dims
+        max_waste = (1.0 + autotune._MAX_WASTE) ** len(contract.align) - 1
+    out: List[Finding] = []
+    for probe in contract.probes:
+        cands = contract.candidates(probe)
+        if not cands:
+            out.append(Finding(
+                "contract-registry", _PATH, 0,
+                f"{contract.name}{_fmt_probe(probe)}: empty candidate "
+                "lattice"))
+            continue
+        sole = len(cands) == 1
+        for cand in cands:
+            tag = f"{contract.name}{_fmt_probe(probe)} candidate " \
+                  f"{_fmt_blocks(cand.blocks)}"
+            for key, mult in sorted(contract.align.items()):
+                blk = cand.blocks.get(key)
+                if blk is None:
+                    out.append(Finding(
+                        "contract-alignment", _PATH, 0,
+                        f"{tag}: missing block dim {key!r}"))
+                elif blk % mult != 0 or blk <= 0:
+                    kind = "lane" if mult == 128 else "sublane"
+                    out.append(Finding(
+                        "contract-alignment", _PATH, 0,
+                        f"{tag}: {key}={blk} is not a multiple of "
+                        f"{mult} ({kind} tile) — Mosaic would reject or "
+                        "silently retile this block"))
+            if cand.vmem_bytes > budget:
+                out.append(Finding(
+                    "contract-vmem", _PATH, 0,
+                    f"{tag}: modeled working set {cand.vmem_bytes} B "
+                    f"exceeds the {budget} B VMEM budget"))
+            if cand.waste > max_waste and not sole:
+                out.append(Finding(
+                    "contract-waste", _PATH, 0,
+                    f"{tag}: padding waste {cand.waste:.2f} exceeds "
+                    f"{max_waste:.2f} with smaller candidates available"))
+            try:
+                got = _shapes(contract.abstract_eval(probe, cand.blocks))
+                want = _shapes(contract.expected(probe, cand.blocks))
+            # repro-check: allow[bare-except] — any trace-time rejection of the candidate is the finding itself
+            except Exception:
+                err = traceback.format_exc().strip().splitlines()[-1]
+                out.append(Finding(
+                    "contract-abstract-eval", _PATH, 0,
+                    f"{tag}: kernel failed abstract eval: {err}"))
+                continue
+            if got != want:
+                out.append(Finding(
+                    "contract-abstract-eval", _PATH, 0,
+                    f"{tag}: traced outputs {got} != contract "
+                    f"expectation {want}"))
+    return out
+
+
+def check_kernel_contracts() -> List[Finding]:
+    """The full pass: registry coherence + every contract."""
+    out: List[Finding] = []
+    _check_registry(out)
+    from repro.kernels.contracts import CONTRACTS
+    for name in sorted(CONTRACTS):
+        out.extend(check_contract(CONTRACTS[name]))
+    return out

@@ -1,0 +1,496 @@
+"""AST dispatch-hygiene lint: the bug classes this repo has already shipped.
+
+Every rule here encodes a failure mode that reached ``main`` and was
+hot-fixed by a later PR (see README.md for the catalog and the history):
+
+* ``host-sync-traced`` — ``float()`` / ``.item()`` / ``np.asarray`` /
+  ``jax.device_get`` reachable from a jitted, scanned, or otherwise traced
+  body.  On a tracer these raise at trace time — but only on the first
+  execution of that code path, which may be an untested arch or mesh
+  configuration; the lint fails before dispatch ever runs.
+* ``host-sync-loop`` — a blocking ``float()`` / ``.item()`` on a device
+  value inside a Python ``for``/``while`` loop: one host sync per step,
+  the seed refinement engine's dispatch pathology (PR 4 rewrote it into a
+  single scanned dispatch).  Intentional parity/reference loops carry an
+  inline ``repro-check: allow[host-sync-loop]`` justification.
+* ``jit-cache-key`` — an ``lru_cache``d factory that builds a ``jax.jit``
+  while reading ambient config (``jax.default_backend()``, ``os.environ``,
+  the active mesh) inside the cached body: the cache key omits the config,
+  so the first call's environment is baked into every later call — the
+  PR-3 ``_sweep_fn`` stale-donation bug, generalized.  Config must arrive
+  through the factory's parameters.
+* ``donated-reuse`` — an argument passed at a ``donate_argnums`` position
+  of a jitted call is read again afterwards; the buffer may have been
+  aliased into the output and its contents are undefined.
+* ``print-hot`` — ``print`` in library code (``core``/``kernels``/
+  ``models``/``optim``/``distributed``/``checkpoint``) or reachable from a
+  traced body.  Library progress goes through ``logging`` (PR 1 converted
+  ``pipeline``/``refine``); ``launch`` CLI tools keep their stdout.
+* ``bare-except`` — ``except:`` / ``except Exception:`` without an inline
+  justification; failures must be narrowed or explicitly excused.
+
+The pass is intra-module: traced roots are functions decorated with or
+passed to ``jit`` / ``vmap`` / ``grad`` / ``shard_map`` / ``pallas_call``
+/ ``lax.scan``-family combinators, and reachability follows simple-name
+calls to functions defined in the same module (the repo's factories are
+all module-local, so this covers the real dispatch surface without a
+whole-program call graph).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Allowlist, Finding, apply_allowlist
+
+RULES: Dict[str, str] = {
+    "host-sync-traced": "host sync (float/.item/np.asarray/device_get) "
+                        "reachable from a traced body",
+    "host-sync-loop": "per-step host sync (float/.item of a device value) "
+                      "inside a Python loop",
+    "jit-cache-key": "lru_cache'd jit factory reads ambient config its "
+                     "cache key omits",
+    "donated-reuse": "buffer read after being passed at a donated argnum",
+    "print-hot": "print() in library code or a traced body",
+    "bare-except": "bare or blanket except without justification",
+    "allow-no-reason": "allowlist marker without a justification",
+}
+
+# packages whose modules count as library "hot path" for print-hot
+HOT_PACKAGE_MARKERS = ("/core/", "/kernels/", "/models/", "/optim/",
+                       "/distributed/", "/checkpoint/")
+
+# transforms whose function argument becomes a traced root:
+#   name -> positional indices of the traced callables
+_TRACER_ARGS: Dict[str, Tuple[int, ...]] = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "shard_map": (0,), "data_shard_map": (0,),
+    "pallas_call": (0,), "scan": (0,), "while_loop": (0, 1),
+    "remat": (0,), "checkpoint": (0,),
+    "fori_loop": (2,), "cond": (1, 2), "switch": (1,),
+}
+
+_HOST_NP_ROOTS = {"np", "numpy", "onp"}
+_AMBIENT_READS = {"default_backend", "devices", "device_count",
+                  "local_device_count", "active_mesh", "active_mode",
+                  "active_cfg", "getenv"}
+
+_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _last_name(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Call):
+        return _last_name(node.func)
+    return None
+
+
+def _chain(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """Dotted-name chain of an Attribute/Name expr: np.asarray -> (np,
+    asarray); anything non-static (calls, subscripts) -> None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _walk_scope(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function's (or module's) own code, NOT descending into
+    nested function/lambda bodies — those run only when called and are
+    handled through the reachability worklist."""
+    body = fn.body if not isinstance(fn, ast.Lambda) else [fn.body]
+    stack: List[ast.AST] = list(body) if isinstance(body, list) else [body]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _SCOPES):
+                continue
+            stack.append(child)
+
+
+class _Module:
+    """Parsed module with scope / def / parent indices."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.tree = ast.parse(source)
+        self.parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[id(child)] = node
+        # enclosing scope node per node; immediate function defs per scope
+        self.defs_in: Dict[int, Dict[str, ast.AST]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scope = self.scope_of(node)
+                self.defs_in.setdefault(id(scope), {})[node.name] = node
+            elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                             ast.Lambda):
+                scope = self.scope_of(node)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.defs_in.setdefault(id(scope), {})[tgt.id] = \
+                            node.value
+
+    def scope_of(self, node: ast.AST) -> ast.AST:
+        cur = self.parents.get(id(node))
+        while cur is not None and not isinstance(cur, _SCOPES):
+            cur = self.parents.get(id(cur))
+        return cur if cur is not None else self.tree
+
+    def resolve(self, name: str, use_site: ast.AST) -> Optional[ast.AST]:
+        scope: Optional[ast.AST] = self.scope_of(use_site)
+        while scope is not None:
+            hit = self.defs_in.get(id(scope), {}).get(name)
+            if hit is not None:
+                return hit
+            if scope is self.tree:
+                return None
+            scope = self.scope_of(scope)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# traced-root discovery + reachability
+
+
+def _is_traced_decorator(dec: ast.AST) -> bool:
+    if _last_name(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        f = _last_name(dec.func)
+        if f == "jit":
+            return True
+        if f == "partial" and dec.args and _last_name(dec.args[0]) == "jit":
+            return True
+    return False
+
+
+def _traced_roots(mod: _Module) -> List[ast.AST]:
+    roots: List[ast.AST] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_traced_decorator(d) for d in node.decorator_list):
+                roots.append(node)
+        elif isinstance(node, ast.Call):
+            name = _last_name(node.func)
+            idxs = _TRACER_ARGS.get(name or "")
+            if not idxs:
+                continue
+            for i in idxs:
+                if i >= len(node.args):
+                    continue
+                args = [node.args[i]]
+                if name == "switch" and isinstance(node.args[i],
+                                                   (ast.List, ast.Tuple)):
+                    args = list(node.args[i].elts)
+                for arg in args:
+                    if isinstance(arg, ast.Lambda):
+                        roots.append(arg)
+                    elif isinstance(arg, ast.Name):
+                        hit = mod.resolve(arg.id, node)
+                        if hit is not None:
+                            roots.append(hit)
+    return roots
+
+
+def _reachable(mod: _Module, roots: Sequence[ast.AST]) -> List[ast.AST]:
+    seen: Set[int] = set()
+    out: List[ast.AST] = []
+    work = list(roots)
+    while work:
+        fn = work.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        out.append(fn)
+        for node in _walk_scope(fn):
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Name):
+                hit = mod.resolve(node.func.id, node)
+                if hit is not None:
+                    work.append(hit)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-rule checks
+
+
+def _host_sync_kind(node: ast.Call) -> Optional[str]:
+    """Classify a call as a host sync (returns a label) or None."""
+    func = node.func
+    if isinstance(func, ast.Name) and func.id == "float":
+        if node.args and isinstance(node.args[0], ast.Constant):
+            return None                       # float("nan") etc.
+        return "float()"
+    if isinstance(func, ast.Attribute) and func.attr == "item" \
+            and not node.args:
+        return ".item()"
+    chain = _chain(func)
+    if chain and chain[0] in _HOST_NP_ROOTS and chain[-1] in ("asarray",
+                                                              "array"):
+        return f"{chain[0]}.{chain[-1]}"
+    if chain and chain[-1] == "device_get":
+        return "device_get"
+    return None
+
+
+def _check_traced_bodies(mod: _Module, reachable: Sequence[ast.AST],
+                         out: List[Finding]) -> None:
+    for fn in reachable:
+        for node in _walk_scope(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            sync = _host_sync_kind(node)
+            if sync is not None:
+                out.append(Finding(
+                    "host-sync-traced", mod.path, node.lineno,
+                    f"{sync} inside a traced body (would block or fail at "
+                    "trace time) — return the value and sync outside"))
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id == "print":
+                out.append(Finding(
+                    "print-hot", mod.path, node.lineno,
+                    "print() inside a traced body — use jax.debug.print "
+                    "or log outside the trace"))
+
+
+def _loop_device_names(loop: ast.AST) -> Set[str]:
+    """Names bound from call results within the loop body (any tuple
+    nesting): candidates for per-step device values."""
+    names: Set[str] = set()
+    for node in ast.walk(loop):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if isinstance(node, ast.Assign):
+            has_call = any(isinstance(n, ast.Call)
+                           for n in ast.walk(node.value))
+            if not has_call:
+                continue
+            for tgt in node.targets:
+                for leaf in ast.walk(tgt):
+                    if isinstance(leaf, ast.Name):
+                        names.add(leaf.id)
+    return names
+
+
+def _check_loops(mod: _Module, traced: Sequence[ast.AST],
+                 out: List[Finding]) -> None:
+    traced_ids = {id(f) for f in traced}
+    for loop in ast.walk(mod.tree):
+        if not isinstance(loop, (ast.For, ast.While)):
+            continue
+        if id(mod.scope_of(loop)) in traced_ids:
+            continue        # unrolled in-trace loops: host-sync-traced owns
+        device_names = _loop_device_names(loop)
+        for node in ast.walk(loop):
+            if isinstance(node, _SCOPES) or not isinstance(node, ast.Call):
+                continue
+            is_float = isinstance(node.func, ast.Name) \
+                and node.func.id == "float" and node.args
+            is_item = isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args
+            if not (is_float or is_item):
+                continue
+            target = node.args[0] if is_float else node.func.value
+            if isinstance(target, ast.Subscript):
+                target = target.value
+            synced = isinstance(target, ast.Call) or (
+                isinstance(target, ast.Name) and target.id in device_names)
+            if synced:
+                what = "float()" if is_float else ".item()"
+                out.append(Finding(
+                    "host-sync-loop", mod.path, node.lineno,
+                    f"{what} on a per-step device value inside a loop — "
+                    "one blocking sync per iteration; scan the loop or "
+                    "batch the transfer"))
+
+
+def _check_cache_keys(mod: _Module, out: List[Finding]) -> None:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not any(_last_name(d) in ("lru_cache", "cache")
+                   for d in node.decorator_list):
+            continue
+        body = list(ast.walk(node))          # nested defs included: the
+        #   factory's closures share its cache entry
+        makes_jit = any(isinstance(n, ast.Call)
+                        and _last_name(n.func) == "jit" for n in body)
+        if not makes_jit:
+            continue
+        params = {a.arg for a in (node.args.args + node.args.kwonlyargs
+                                  + node.args.posonlyargs)}
+        for n in body:
+            label = None
+            if isinstance(n, ast.Call):
+                name = _last_name(n.func)
+                if name in _AMBIENT_READS:
+                    label = f"{name}()"
+            chain = _chain(n) if isinstance(n, ast.Attribute) else None
+            if chain and chain[-2:] == ("os", "environ"):
+                label = "os.environ"
+            elif chain and len(chain) == 1 and chain[0] == "environ":
+                label = "environ"
+            if label and label.rstrip("()") not in params:
+                out.append(Finding(
+                    "jit-cache-key", mod.path, n.lineno,
+                    f"lru_cache'd jit factory {node.name!r} reads "
+                    f"{label} inside the cached body — the cache key "
+                    "omits it (PR-3 bug class); pass it as a parameter"))
+
+
+def _donated_positions(call: ast.Call) -> Optional[List[int]]:
+    """Literal donate_argnums of a jax.jit(...) call, else None."""
+    if _last_name(call.func) != "jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        val = kw.value
+        if isinstance(val, ast.Constant) and isinstance(val.value, int):
+            return [val.value]
+        if isinstance(val, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in val.elts):
+            return [e.value for e in val.elts]
+        return None                           # dynamic: can't resolve
+    return None
+
+
+def _check_donated_reuse(mod: _Module, out: List[Finding]) -> None:
+    # name -> donated positions, for module/function-local `f = jax.jit(g,
+    # donate_argnums=(...))` bindings with literal argnums
+    donated: Dict[str, List[int]] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            pos = _donated_positions(node.value)
+            if pos is not None:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        donated[tgt.id] = pos
+    if not donated:
+        return
+    for block_owner in ast.walk(mod.tree):
+        for field in ("body", "orelse", "finalbody"):
+            block = getattr(block_owner, field, None)
+            if not isinstance(block, list):
+                continue
+            _check_block_reuse(mod, block, donated, out)
+
+
+def _check_block_reuse(mod: _Module, block: List[ast.stmt],
+                       donated: Dict[str, List[int]],
+                       out: List[Finding]) -> None:
+    for i, stmt in enumerate(block):
+        for call in ast.walk(stmt):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in donated):
+                continue
+            for pos in donated[call.func.id]:
+                if pos >= len(call.args):
+                    continue
+                arg = call.args[pos]
+                if not isinstance(arg, ast.Name):
+                    continue
+                if any(isinstance(n, ast.Name) and n.id == arg.id
+                       and isinstance(n.ctx, ast.Store)
+                       for n in ast.walk(stmt)):
+                    continue    # `x, _ = f(x)` rebinds x from the result
+                line = _first_use_after(block[i + 1:], arg.id)
+                if line is not None:
+                    out.append(Finding(
+                        "donated-reuse", mod.path, line,
+                        f"{arg.id!r} read after being donated to "
+                        f"{call.func.id}() (argnum {pos}) — the buffer "
+                        "is undefined after donation; rebind it from "
+                        "the call's result"))
+
+
+def _first_use_after(stmts: Sequence[ast.stmt],
+                     name: str) -> Optional[int]:
+    """Line of the first Load of ``name`` before any re-binding Store."""
+    for stmt in stmts:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name) and node.id == name:
+                if isinstance(node.ctx, ast.Store):
+                    return None
+                return node.lineno
+    return None
+
+
+def _check_prints_and_excepts(mod: _Module, hot: bool,
+                              out: List[Finding]) -> None:
+    for node in ast.walk(mod.tree):
+        if hot and isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Name) \
+                and node.func.id == "print":
+            out.append(Finding(
+                "print-hot", mod.path, node.lineno,
+                "print() in library code — route through logging "
+                "(logger per module) so large runs can silence it"))
+        elif isinstance(node, ast.ExceptHandler):
+            if node.type is None:
+                out.append(Finding(
+                    "bare-except", mod.path, node.lineno,
+                    "bare except: catches everything including "
+                    "KeyboardInterrupt — name the exceptions"))
+            elif _last_name(node.type) in ("Exception", "BaseException"):
+                out.append(Finding(
+                    "bare-except", mod.path, node.lineno,
+                    f"except {_last_name(node.type)}: blanket handler — "
+                    "narrow it or justify inline"))
+
+
+# ---------------------------------------------------------------------------
+# entry point
+
+
+def _is_hot(path: str) -> bool:
+    norm = path.replace("\\", "/")
+    return "/repro/" in norm and any(m in norm for m in HOT_PACKAGE_MARKERS)
+
+
+def check_source(path: str, source: str, *,
+                 hot: Optional[bool] = None) -> List[Finding]:
+    """All dispatch-hygiene findings for one module's source, allowlist
+    applied.  ``hot`` forces/suppresses the library-code ``print-hot``
+    half (None = infer from the path's package)."""
+    try:
+        mod = _Module(path, source)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 0, str(e.msg))]
+    findings: List[Finding] = []
+    roots = _traced_roots(mod)
+    reachable = _reachable(mod, roots)
+    _check_traced_bodies(mod, reachable, findings)
+    _check_loops(mod, reachable, findings)
+    _check_cache_keys(mod, findings)
+    _check_donated_reuse(mod, findings)
+    _check_prints_and_excepts(mod, _is_hot(path) if hot is None else hot,
+                              findings)
+    # a traced-body print in a hot module trips both print checks: keep
+    # the first (traced) finding per (rule, line)
+    seen, unique = set(), []
+    for f in findings:
+        if (f.rule, f.line) not in seen:
+            seen.add((f.rule, f.line))
+            unique.append(f)
+    unique.sort(key=lambda f: (f.line, f.rule))
+    return apply_allowlist(unique, Allowlist(path, source))
+
+
+def check_file(path: str, *, hot: Optional[bool] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return check_source(path, f.read(), hot=hot)

@@ -1,0 +1,46 @@
+"""pytest plugin: trace-budget enforcement for marked tests.
+
+Registered from ``tests/conftest.py``.  Two surfaces:
+
+* ``@pytest.mark.trace_budget("<workload>")`` — the test body runs inside
+  a :class:`repro.analysis.retrace.TraceSentinel` for the named workload
+  from ``analysis/trace_budgets.json``, with the memoized jit factories
+  cleared first (budgets are defined from a cold cache).  Exceeding any
+  entry point's budget fails the test with the per-entry-point overage.
+* ``trace_sentinel`` fixture — an unbudgeted sentinel for tests that
+  assert on ``delta()`` directly (e.g. "the scan path never traces the
+  per-batch ``eval1``").
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import retrace
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "trace_budget(workload): enforce analysis/trace_budgets.json for "
+        "the named workload around this test (cold jit-factory caches)")
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    marker = item.get_closest_marker("trace_budget")
+    if marker is None:
+        return (yield)
+    workload = marker.args[0]
+    with retrace.TraceSentinel(workload=workload, cold=True):
+        return (yield)
+
+
+@pytest.fixture
+def trace_sentinel():
+    """An entered, unbudgeted TraceSentinel (cold caches); assert on
+    ``.delta()`` / call ``.verify()`` in the test."""
+    with retrace.TraceSentinel(budgets={}, cold=True) as s:
+        # budgets={} = entered context never raises on exit; the test
+        # inspects the delta itself
+        yield s

@@ -1,0 +1,180 @@
+"""Retrace sentinel: count traces per memoized jit entry point.
+
+PR 2 collapsed the sweep's per-layer dispatch into one scanned jit; PR 4
+did the same for refinement.  Those wins are numbers (``history
+["dispatches"]``, trace counts) that regress silently — an innocent
+change to a static argument or a cache key turns one trace into one per
+layer, and nothing fails until someone profiles.  This module makes the
+trace count an enforced contract:
+
+* every memoized jit entry point wraps its to-be-jitted Python function
+  in :func:`counted` — ``jax.jit`` calls the underlying function exactly
+  once per compilation-cache miss, so the wrapper increments a process-
+  global counter at each retrace and adds *zero* steady-state overhead
+  (cache hits never re-enter Python);
+* :class:`TraceSentinel` snapshots the counters around a workload and
+  verifies the delta against a named budget from
+  ``analysis/trace_budgets.json``;
+* the pytest plugin (``repro.analysis.pytest_plugin``) applies budgets to
+  tests marked ``@pytest.mark.trace_budget("<workload>")``.
+
+Entry points are a closed registry (:data:`ENTRY_POINTS`): a typo'd name
+fails at import time, and the CLI cross-checks every budget key against
+the registry so the budget file can't drift from the code.
+
+Kept import-light on purpose — ``core`` modules import this at module
+scope, so it must not import jax (or anything heavy) back.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import threading
+from typing import Callable, Dict, Mapping, Optional
+
+# The memoized jit entry points. Adding one = wrapping the function with
+# counted() at its jit site AND extending this registry (same diff).
+ENTRY_POINTS = frozenset({
+    "streaming.sweep",        # core/streaming.py:_sweep_fn
+    "refine.run_all",         # core/refine.py:_refine_fns (scan, all epochs)
+    "refine.run_epoch",       # core/refine.py:_refine_fns (scan, one epoch)
+    "refine.step1",           # core/refine.py:_refine_fns (loop parity path)
+    "refine.eval_scan",       # core/refine.py:_refine_fns (scanned eval)
+    "refine.eval1",           # core/refine.py:_refine_fns (per-batch eval)
+    "pipeline.unit_apply",    # core/pipeline.py:make_unit_apply
+})
+
+BUDGET_FILE = os.path.join(os.path.dirname(__file__), "trace_budgets.json")
+
+_lock = threading.Lock()
+_counts: Dict[str, int] = {}
+
+
+class TraceBudgetError(AssertionError):
+    """A workload traced an entry point more often than its budget."""
+
+
+def counted(name: str, fn: Callable) -> Callable:
+    """Wrap ``fn`` so each call bumps the trace counter for ``name``.
+
+    Wrap *before* ``jax.jit``: jit invokes the wrapped Python callable
+    only on compilation-cache misses, so call count == trace count.
+    """
+    if name not in ENTRY_POINTS:
+        raise ValueError(
+            f"unknown trace entry point {name!r} — register it in "
+            "repro.analysis.retrace.ENTRY_POINTS")
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        with _lock:
+            _counts[name] = _counts.get(name, 0) + 1
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+def counts() -> Dict[str, int]:
+    """Snapshot of cumulative trace counts this process."""
+    with _lock:
+        return dict(_counts)
+
+
+def reset() -> None:
+    with _lock:
+        _counts.clear()
+
+
+def load_budgets(workload: str,
+                 path: str = BUDGET_FILE) -> Dict[str, int]:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    try:
+        budgets = data["workloads"][workload]
+    except KeyError:
+        known = ", ".join(sorted(data.get("workloads", {})))
+        raise KeyError(
+            f"no trace budget for workload {workload!r} in {path} "
+            f"(known: {known})") from None
+    bad = set(budgets) - ENTRY_POINTS
+    if bad:
+        raise ValueError(
+            f"budget for {workload!r} names unknown entry points: "
+            f"{sorted(bad)}")
+    return {k: int(v) for k, v in budgets.items()}
+
+
+def reset_entry_caches() -> None:
+    """Clear the lru_cache'd jit factories so the next workload traces
+    from scratch — budgets are only deterministic from a cold cache.
+
+    Lazy imports: retrace must stay importable without jax, and core
+    modules import retrace at module scope (cycle otherwise).
+    """
+    from repro.core import pipeline, refine, streaming
+    streaming._sweep_fn.cache_clear()
+    refine._refine_fns.cache_clear()
+    pipeline.make_unit_apply.cache_clear()
+
+
+class TraceSentinel:
+    """Count traces across a workload; optionally enforce a budget.
+
+    >>> with TraceSentinel(workload="refine_scan_tiny") as s:
+    ...     refine_unit(...)
+    ... # raises TraceBudgetError on exit if any entry point exceeded
+    >>> s.delta()
+    {'refine.run_all': 1, ...}
+
+    With no ``workload``/``budgets``, it's a pure counter (``delta()``),
+    useful for measuring a budget before pinning it.  Entry points absent
+    from the budget mapping are unconstrained; a budget of 0 asserts the
+    entry point is never traced (e.g. the scan path must not touch the
+    per-batch ``refine.eval1``).
+    """
+
+    def __init__(self, budgets: Optional[Mapping[str, int]] = None, *,
+                 workload: Optional[str] = None,
+                 cold: bool = False):
+        if workload is not None:
+            if budgets is not None:
+                raise ValueError("pass budgets= or workload=, not both")
+            budgets = load_budgets(workload)
+        self.budgets = dict(budgets) if budgets is not None else None
+        self.workload = workload
+        self._cold = cold
+        self._start: Dict[str, int] = {}
+
+    def __enter__(self) -> "TraceSentinel":
+        if self._cold:
+            reset_entry_caches()
+        self._start = counts()
+        return self
+
+    def delta(self) -> Dict[str, int]:
+        now = counts()
+        return {k: v - self._start.get(k, 0) for k, v in now.items()
+                if v - self._start.get(k, 0) > 0}
+
+    def verify(self) -> None:
+        if self.budgets is None:
+            return
+        got = self.delta()
+        over = {k: (got.get(k, 0), cap) for k, cap in self.budgets.items()
+                if got.get(k, 0) > cap}
+        if over:
+            label = f" for workload {self.workload!r}" if self.workload \
+                else ""
+            lines = [f"  {k}: traced {g}x, budget {cap}"
+                     for k, (g, cap) in sorted(over.items())]
+            raise TraceBudgetError(
+                "trace budget exceeded" + label + ":\n" + "\n".join(lines)
+                + "\n(an entry point is retracing — check static args "
+                  "and cache keys; if intended, update "
+                  "analysis/trace_budgets.json in this diff)")
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.verify()

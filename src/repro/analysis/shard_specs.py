@@ -1,0 +1,140 @@
+"""Shard-spec pass: static checks on ``shard_map`` call sites.
+
+``distributed.sharding.data_shard_map`` turns replication checking off
+(``check_rep=False`` / ``check_vma=False``) because ``pallas_call``
+carries no replication rule — which silently shifts the correctness
+burden to the caller: the mapped function MUST all-reduce its outputs
+itself, or every worker returns a partial product that the out-spec then
+declares replicated.  That contract is invisible at runtime (results are
+just wrong on >1 workers) but fully visible in the AST:
+
+* ``shardmap-no-psum``          — a ``data_shard_map`` call whose mapped
+  function contains no collective (``psum``/``pmax``/``pmin``/
+  ``all_gather``/``psum_scatter``, directly or through a module-local
+  callee): nothing compensates for the disabled replication check.
+* ``bad-mesh-axis``             — a string literal inside a ``P(...)`` /
+  ``PartitionSpec(...)`` in a shard_map call's in/out specs that names an
+  axis outside the production mesh ({pod, data, model}): GSPMD rejects it
+  only when that code path finally runs on a mesh.
+* ``raw-unreplicated-shardmap`` — a direct ``shard_map(...,
+  check_rep=False)`` outside the one blessed wrapper: go through
+  ``data_shard_map`` so the policy (and this checker) sees it.
+
+Dynamic specs (axis tuples built at runtime, e.g. ``dp_axes(mesh)``) are
+out of static reach and intentionally ignored — only literals are judged.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.dispatch import _last_name, _Module, _walk_scope
+from repro.analysis.findings import Allowlist, Finding, apply_allowlist
+
+# the production mesh axes (distributed.sharding.make_mesh); the CLI
+# cross-checks this against the live module so it cannot drift silently
+MESH_AXES = frozenset({"pod", "data", "model"})
+
+_COLLECTIVES = {"psum", "pmax", "pmin", "pmean", "all_gather",
+                "psum_scatter", "all_to_all"}
+
+RULES = {
+    "shardmap-no-psum": "data_shard_map'd function has no compensating "
+                        "collective (check_rep is off)",
+    "bad-mesh-axis": "PartitionSpec literal names an axis outside the "
+                     "production mesh",
+    "raw-unreplicated-shardmap": "shard_map(check_rep=False) outside the "
+                                 "data_shard_map wrapper",
+}
+
+
+def _has_collective(mod: _Module, fn: ast.AST, depth: int = 0) -> bool:
+    """Does ``fn`` (or a module-local callee, two levels deep) issue a
+    collective?"""
+    if depth > 2:
+        return False
+    for node in _walk_scope(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        if _last_name(node.func) in _COLLECTIVES:
+            return True
+        if isinstance(node.func, ast.Name):
+            callee = mod.resolve(node.func.id, node)
+            if callee is not None and _has_collective(mod, callee,
+                                                      depth + 1):
+                return True
+    return False
+
+
+def _spec_literals(expr: ast.AST):
+    """(line, axis-string) for every literal inside P(...)/PartitionSpec
+    calls under ``expr``."""
+    for node in ast.walk(expr):
+        if not (isinstance(node, ast.Call)
+                and _last_name(node.func) in ("P", "PartitionSpec")):
+            continue
+        for arg in node.args:
+            for leaf in ast.walk(arg):
+                if isinstance(leaf, ast.Constant) \
+                        and isinstance(leaf.value, str):
+                    yield leaf.lineno, leaf.value
+
+
+def _check_call(mod: _Module, call: ast.Call,
+                out: List[Finding]) -> None:
+    name = _last_name(call.func)
+    if name == "data_shard_map":
+        mapped: Optional[ast.AST] = None
+        if call.args:
+            arg = call.args[0]
+            if isinstance(arg, ast.Lambda):
+                mapped = arg
+            elif isinstance(arg, ast.Name):
+                mapped = mod.resolve(arg.id, call)
+        if mapped is None or not _has_collective(mod, mapped):
+            out.append(Finding(
+                "shardmap-no-psum", mod.path, call.lineno,
+                "data_shard_map disables the replication check but the "
+                "mapped function issues no collective — each worker "
+                "returns an un-reduced partial; psum inside the mapped "
+                "fn (or justify inline)"))
+    elif name == "shard_map":
+        for kw in call.keywords:
+            if kw.arg in ("check_rep", "check_vma") \
+                    and isinstance(kw.value, ast.Constant) \
+                    and kw.value.value is False:
+                out.append(Finding(
+                    "raw-unreplicated-shardmap", mod.path, call.lineno,
+                    f"shard_map({kw.arg}=False) call — route through "
+                    "distributed.sharding.data_shard_map so the no-psum "
+                    "check sees the call site"))
+    else:
+        return
+    for kw in call.keywords:
+        if kw.arg not in ("in_specs", "out_specs"):
+            continue
+        for line, axis in _spec_literals(kw.value):
+            if axis not in MESH_AXES:
+                out.append(Finding(
+                    "bad-mesh-axis", mod.path, line,
+                    f"PartitionSpec names axis {axis!r} — not a "
+                    f"production mesh axis {sorted(MESH_AXES)}"))
+
+
+def check_source(path: str, source: str) -> List[Finding]:
+    try:
+        mod = _Module(path, source)
+    except SyntaxError as e:
+        return [Finding("syntax-error", path, e.lineno or 0, str(e.msg))]
+    findings: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            _check_call(mod, node, findings)
+    findings.sort(key=lambda f: (f.line, f.rule))
+    return apply_allowlist(findings, Allowlist(path, source))
+
+
+def check_file(path: str) -> List[Finding]:
+    with open(path, encoding="utf-8") as f:
+        return check_source(path, f.read())

@@ -105,6 +105,7 @@ from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import retrace as RT
 from repro.core import calibration as C
 from repro.core import lowrank as LR
 from repro.core import ranks as R
@@ -467,7 +468,7 @@ def make_unit_apply(kind: str, cfg, seq_len: int, want_taps: bool):
         y, _ = B.apply_sub_block(kind, p, x, cfg, ctx)
         return y
 
-    return jax.jit(fn)
+    return jax.jit(RT.counted("pipeline.unit_apply", fn))
 
 
 # ---------------------------------------------------------------------------

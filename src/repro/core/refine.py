@@ -62,6 +62,7 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import retrace as RT
 from repro.core import streaming as S
 from repro.distributed import sharding as SH
 from repro.optim import adamw
@@ -186,11 +187,14 @@ def _refine_fns(apply_fn: Callable, ocfg: adamw.AdamWConfig, epochs: int,
     # input donation would only have saved the initial copy.
     donate = S.carry_donation(backend, 1)
     return _RefineFns(
-        run_all=jax.jit(run_all, donate_argnums=donate),
-        run_epoch=jax.jit(sweep_epoch, donate_argnums=donate),
-        step1=jax.jit(step1, donate_argnums=donate),
-        eval_scan=jax.jit(eval_scan),
-        eval1=jax.jit(loss_fn),
+        run_all=jax.jit(RT.counted("refine.run_all", run_all),
+                        donate_argnums=donate),
+        run_epoch=jax.jit(RT.counted("refine.run_epoch", sweep_epoch),
+                          donate_argnums=donate),
+        step1=jax.jit(RT.counted("refine.step1", step1),
+                      donate_argnums=donate),
+        eval_scan=jax.jit(RT.counted("refine.eval_scan", eval_scan)),
+        eval1=jax.jit(RT.counted("refine.eval1", loss_fn)),
     )
 
 
@@ -258,6 +262,7 @@ def refine_unit(apply_fn: Callable, params, xp_batches: Sequence,
         start = n_uni if batches is not None else 0
         for i in range(start, n_batches):
             history["dispatches"] += 1
+            # repro-check: allow[host-sync-loop] — ragged-tail eval of the few non-uniform trailing microbatches
             tot += float(fns.eval1(p, xs[i],
                                    None if auxs is None else auxs[i],
                                    y_batches[i]))
@@ -301,12 +306,14 @@ def refine_unit(apply_fn: Callable, params, xp_batches: Sequence,
                 history["dispatches"] += 1
                 (params, state), losses = fns.run_epoch(params, state,
                                                         batches)
+                # repro-check: allow[host-sync-loop] — one sync per EPOCH (not per step); the loss feeds the early-stop break
                 ep_loss += float(jnp.sum(losses))
             for i in range(tail_start, n_batches):
                 history["dispatches"] += 1
                 params, state, loss = fns.step1(
                     params, state, xs[i],
                     None if auxs is None else auxs[i], y_batches[i])
+                # repro-check: allow[host-sync-loop] — intentional seed-trajectory parity reference (scan=False contract); the scan path is asserted sync-free by the retrace sentinel test
                 ep_loss += float(loss)
             history["losses"].append(ep_loss / n_batches)
             history["steps"] += n_batches

@@ -79,6 +79,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import retrace as RT
 from repro.core import calibration as C
 from repro.distributed import sharding as SH
 from repro.models import layers as L
@@ -166,7 +167,10 @@ def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
             return new, (y if keep_orig_outputs else jnp.zeros(()))
         return jax.lax.scan(step, covs, batch)
 
-    # donate the accumulator carry where the backend can alias it in place
+    # donate the accumulator carry where the backend can alias it in place;
+    # the retrace counter wraps the Python fn so each compilation-cache
+    # miss (and nothing else) is counted against analysis/trace_budgets
+    sweep = RT.counted("streaming.sweep", sweep)
     return jax.jit(sweep, donate_argnums=carry_donation(backend, 0))
 
 

@@ -304,9 +304,11 @@ def data_shard_map(f, mesh: Mesh, in_specs, out_specs):
     must be disabled.  The kwarg was renamed ``check_rep`` -> ``check_vma``
     when shard_map graduated from jax.experimental — try both."""
     try:
+        # repro-check: allow[raw-unreplicated-shardmap] — this IS the blessed wrapper the rule routes callers to
         return shard_map(f, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
     except TypeError:
+        # repro-check: allow[raw-unreplicated-shardmap] — check_vma spelling of the same blessed wrapper
         return shard_map(f, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_vma=False)
 

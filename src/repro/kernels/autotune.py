@@ -354,7 +354,7 @@ def _measure_best(cands: Sequence[Candidate],
         fn, args = thunk(cand)
         try:
             us = _time_call(fn, args)
-        except Exception:  # noqa: BLE001 — a failing candidate is just skipped
+        except Exception:  # noqa: BLE001; repro-check: allow[bare-except] — a failing candidate (compile/run error) is just skipped
             continue
         if best is None or us < best[1]:
             best = (cand, us)

@@ -17,6 +17,7 @@ XLA einsum, which cost an extra read of x/x' per covariance term.
 from __future__ import annotations
 
 import functools
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +32,21 @@ from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
 
 def use_pallas() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# Static registry: public dispatch wrapper -> contract/lattice name.  The
+# analysis layer (repro.analysis.contracts) cross-checks this against
+# kernels.contracts.CONTRACTS and autotune's _LATTICES/_ANCHORS, so a new
+# kernel cannot ship without a contract and an autotune lattice (or
+# vice versa).  cov_accum_banked vmaps the same fused kernel, hence the
+# shared contract.
+REGISTERED_KERNELS: Dict[str, str] = {
+    "lowrank_matmul": "lowrank_matmul",
+    "cov_accum": "cov_accum",
+    "cov_accum_banked": "cov_accum",
+    "flash_attention": "flash_attention",
+    "flash_decode": "flash_decode",
+}
 
 
 def _pad_dim(x, axis: int, multiple: int):

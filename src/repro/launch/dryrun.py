@@ -122,7 +122,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                   f"{t_compile:.1f}s | compute {r['compute_s']:.2e}s "
                   f"memory {r['memory_s']:.2e}s collective "
                   f"{r['collective_s']:.2e}s -> {r['bottleneck']}")
-    except Exception as exc:  # noqa: BLE001 — report, don't crash the sweep
+    except Exception as exc:  # noqa: BLE001; repro-check: allow[bare-except] — report per-config, don't crash the sweep
         result["status"] = "error"
         result["error"] = f"{type(exc).__name__}: {exc}"
         result["traceback"] = traceback.format_exc()[-4000:]

@@ -104,6 +104,7 @@ def train(cfg, *, steps: int, batch: int, seq_len: int, ckpt_dir: str,
         if (step + 1) % ckpt_every == 0 or step == steps - 1:
             mgr.save(step + 1, state)
         if (step + 1) % log_every == 0:
+            # repro-check: allow[host-sync-loop] — log-interval sync only (every log_every steps, not per step)
             loss = float(metrics["loss"])
             losses.append(loss)
             print(f"[train] step {step + 1}/{steps} loss {loss:.4f} "

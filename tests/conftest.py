@@ -9,6 +9,9 @@ import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 
+# trace-budget enforcement (@pytest.mark.trace_budget / trace_sentinel)
+pytest_plugins = ("repro.analysis.pytest_plugin",)
+
 # Pinned hypothesis profile: tier-1 property suites (tests/test_ranks.py,
 # tests/test_pipeline_props.py) must be deterministic in CI — fixed seed
 # (derandomize) and no wall-clock deadline (CI runners jitter).  Select a

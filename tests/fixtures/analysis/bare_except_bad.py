@@ -1,0 +1,22 @@
+"""Seeded violations: blanket exception handlers."""
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except:                             # bare-except
+        return None
+
+
+def blanket(fn):
+    try:
+        return fn()
+    except Exception:                   # bare-except
+        return None
+
+
+def marker_without_reason(fn):
+    try:
+        return fn()
+    except Exception:  # repro-check: allow[bare-except]
+        return None                     # allow-no-reason AND bare-except

@@ -1,0 +1,15 @@
+"""Near-miss clean code: narrowed handlers and a justified blanket."""
+
+
+def narrowed(fn):
+    try:
+        return fn()
+    except (OSError, ValueError):
+        return None
+
+
+def justified(fn):
+    try:
+        return fn()
+    except Exception:  # repro-check: allow[bare-except] — fixture-blessed: result is advisory
+        return None

@@ -1,0 +1,24 @@
+"""Seeded violation: reading a buffer after donating it."""
+import jax
+
+
+def _step(s, b):
+    return s + b
+
+
+step = jax.jit(_step, donate_argnums=0)
+pair_step = jax.jit(_step, donate_argnums=(0, 1))
+
+
+def train(state, batches, log):
+    for b in batches:
+        out = step(state, b)
+        log(state)                      # donated-reuse: state is dead
+        state = out
+    return state
+
+
+def train_pair(state, batch, log):
+    out = pair_step(state, batch)
+    log(batch)                          # donated-reuse (argnum 1)
+    return out

@@ -1,0 +1,22 @@
+"""Near-miss clean code: donated names rebound before any read."""
+import jax
+
+
+def _step(s, b):
+    return s + b
+
+
+step = jax.jit(_step, donate_argnums=0)
+
+
+def train(state, batches, log):
+    for b in batches:
+        state = step(state, b)          # rebound in the same statement
+        log(state)                      # reads the fresh result
+    return state
+
+
+def train_once(state, batch, log):
+    out = step(state, batch)
+    log(out)                            # never touches the donated input
+    return out

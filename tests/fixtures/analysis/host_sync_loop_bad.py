@@ -1,0 +1,32 @@
+"""Seeded violations: per-step host syncs inside Python loops (the seed
+refinement engine's dispatch pathology)."""
+
+
+def drain(step, batches):
+    total = 0.0
+    for b in batches:
+        loss = step(b)
+        total += float(loss)            # host-sync-loop (name from call)
+    return total
+
+
+def drain_direct(step, batches):
+    total = 0.0
+    for b in batches:
+        total += float(step(b))         # host-sync-loop (direct call)
+    return total
+
+
+def drain_item(step, batches):
+    out = []
+    while batches:
+        out.append(step(batches.pop()).item())   # host-sync-loop
+    return out
+
+
+def drain_indexed(step, batches):
+    total = 0.0
+    for b in batches:
+        metrics = step(b)
+        total += float(metrics["loss"])  # host-sync-loop (subscript)
+    return total

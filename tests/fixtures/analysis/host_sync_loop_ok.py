@@ -1,0 +1,22 @@
+"""Near-miss clean code: batched transfers and host-value floats."""
+
+
+def drain(step, stack, batches):
+    losses = [step(b) for b in batches]
+    # one sync of the stacked result, outside the loop
+    return float(stack(losses).sum())
+
+
+def schedule(n):
+    s = 0.0
+    for i in range(n):
+        s += float(i)                   # float of a host int: fine
+    return s
+
+
+def annotated(step, batches):
+    total = 0.0
+    for b in batches:
+        # repro-check: allow[host-sync-loop] — fixture-blessed parity loop
+        total += float(step(b))
+    return total

@@ -1,0 +1,25 @@
+"""Seeded violations: host syncs reachable from traced bodies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced_float(x):
+    return float(jnp.sum(x))            # host-sync-traced
+
+
+def helper(x):
+    return np.asarray(x)                # host-sync-traced (via scan body)
+
+
+def outer(xs):
+    def body(c, x):
+        return c + jnp.sum(helper(x)), None
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def vmapped(xs):
+    def one(x):
+        return x.item()                 # host-sync-traced (vmap root)
+    return jax.vmap(one)(xs)

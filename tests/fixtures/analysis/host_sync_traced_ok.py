@@ -1,0 +1,23 @@
+"""Near-miss clean code: syncs only outside any traced body."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def traced(x):
+    return jnp.sum(x)
+
+
+def driver(x):
+    # syncing the RESULT of a jitted call, outside any trace, is fine
+    return float(traced(x))
+
+
+def to_host(x):
+    # plain numpy conversion in untraced utility code is fine
+    return np.asarray(x)
+
+
+def untraced_helper(x):
+    return float(jnp.sum(x))            # never reachable from a root

@@ -1,0 +1,26 @@
+"""Seeded violation: the PR-3 bug class — an lru_cache'd jit factory
+whose cache key omits ambient config it reads."""
+import functools
+import os
+
+import jax
+
+
+@functools.lru_cache(maxsize=8)
+def make_step(scale):
+    backend = jax.default_backend()     # jit-cache-key: not in the key
+
+    def step(x):
+        return x * scale
+
+    return jax.jit(step, backend=backend)
+
+
+@functools.lru_cache(maxsize=8)
+def make_env_step(scale):
+    flag = os.environ.get("REPRO_FLAG", "0")   # jit-cache-key
+
+    def step(x):
+        return x * scale if flag == "0" else x
+
+    return jax.jit(step)

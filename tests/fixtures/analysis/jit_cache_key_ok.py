@@ -1,0 +1,29 @@
+"""Near-miss clean code: config arrives through cache-key parameters."""
+import functools
+import os
+
+import jax
+
+
+@functools.lru_cache(maxsize=8)
+def make_step(scale, backend):
+    def step(x):
+        return x * scale
+
+    return jax.jit(step, backend=backend)
+
+
+def make_uncached_step(scale):
+    # ambient read without lru_cache: each call sees fresh config
+    backend = jax.default_backend()
+
+    def step(x):
+        return x * scale
+
+    return jax.jit(step, backend=backend)
+
+
+@functools.lru_cache(maxsize=1)
+def cache_dir():
+    # lru_cache'd env read WITHOUT building a jit: out of scope
+    return os.environ.get("REPRO_CACHE", "/tmp")

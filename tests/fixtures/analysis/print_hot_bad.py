@@ -1,0 +1,13 @@
+"""Seeded violations: prints in library code and in a traced body.
+(The test drives this file with hot=True — library-package semantics.)"""
+import jax
+
+
+def report(loss):
+    print("loss", loss)                 # print-hot (library code)
+
+
+@jax.jit
+def traced(x):
+    print(x)                            # print-hot (traced body)
+    return x

@@ -1,0 +1,21 @@
+"""Near-miss clean code: logging in library code; CLI prints are exempt
+when hot=False (launch/ tools)."""
+import logging
+
+import jax
+
+LOG = logging.getLogger(__name__)
+
+
+def report(loss):
+    LOG.info("loss %s", loss)
+
+
+@jax.jit
+def traced(x):
+    jax.debug.print("x = {}", x)        # the traced-safe print
+    return x
+
+
+def cli_main():
+    print("usage: ...")                 # fine at hot=False

@@ -1,0 +1,28 @@
+"""Seeded violations: shard_map call-site contracts."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import data_shard_map, shard_map
+
+
+def no_collective(mesh):
+    def local(x):
+        return x * 2                    # partial product, never reduced
+
+    return data_shard_map(local, mesh, in_specs=(P("data"),),
+                          out_specs=P())       # shardmap-no-psum
+
+
+def bad_axis(mesh):
+    def local(x):
+        return jax.lax.psum(x, "data")
+
+    return data_shard_map(local, mesh,
+                          in_specs=(P("batch"),),   # bad-mesh-axis
+                          out_specs=P())
+
+
+def raw_unchecked(fn, mesh):
+    return shard_map(fn, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"),
+                     check_rep=False)   # raw-unreplicated-shardmap

@@ -1,0 +1,21 @@
+"""Near-miss clean code: the blessed data_shard_map shape (mirrors
+kernels.ops._sharded_triple)."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import data_shard_map, shard_map
+
+
+def reduced_triple(local_fn, mesh, dp):
+    def local(xs, xps):
+        return tuple(jax.lax.psum(o, dp) for o in local_fn(xs, xps))
+
+    return data_shard_map(local, mesh,
+                          in_specs=(P("data"), P("data")),
+                          out_specs=(P(), P(), P()))
+
+
+def checked_map(fn, mesh):
+    # replication checking stays ON: no compensating psum required
+    return shard_map(fn, mesh=mesh, in_specs=(P("data", "model"),),
+                     out_specs=P("data"))

@@ -1,0 +1,114 @@
+"""Kernel-contract pass: the repo's contracts hold, and each failure
+class (unaligned candidate, over-VMEM candidate, abstract-eval rejection,
+shape drift, registry orphan) demonstrably fires on a seeded violation —
+all statically, no accelerator.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.contracts import (check_contract,
+                                      check_kernel_contracts)
+from repro.kernels import autotune, ops
+from repro.kernels.autotune import Candidate
+from repro.kernels.contracts import CONTRACTS
+from repro.kernels.cov_accum import cov_accum as cov_kernel
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+class TestRepoContractsHold:
+    def test_full_pass_clean(self):
+        findings = check_kernel_contracts()
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_registry_covers_all_wrappers(self):
+        assert set(ops.REGISTERED_KERNELS.values()) == set(CONTRACTS)
+        assert set(CONTRACTS) == set(autotune._LATTICES)
+        assert set(CONTRACTS) == set(autotune._ANCHORS)
+        for wrapper in ops.REGISTERED_KERNELS:
+            assert callable(getattr(ops, wrapper))
+
+
+class TestSeededViolations:
+    def test_unaligned_lattice_candidate_caught_statically(self):
+        # bi=100 divides nothing Mosaic can tile: the lane rule must fire
+        # even though the blocks trace fine (misalignment only explodes
+        # at lowering on hardware — exactly why the static check exists)
+        bad = CONTRACTS["cov_accum"]._replace(
+            probes=({"t": 512, "n": 200},),
+            candidates=lambda p: [
+                Candidate({"bt": 512, "bi": 100}, 10_000, 0.0)])
+        got = check_contract(bad)
+        assert "contract-alignment" in _rules(got)
+        assert any("bi=100" in f.message and "lane" in f.message
+                   for f in got)
+
+    def test_unaligned_sublane_candidate_caught(self):
+        bad = CONTRACTS["cov_accum"]._replace(
+            probes=({"t": 300, "n": 128},),
+            candidates=lambda p: [
+                Candidate({"bt": 300, "bi": 128}, 10_000, 0.0)])
+        got = check_contract(bad)
+        assert any(f.rule == "contract-alignment"
+                   and "bt=300" in f.message for f in got)
+
+    def test_over_vmem_candidate_caught(self):
+        blocks = {"bt": 1024, "bi": 512}
+        bad = CONTRACTS["cov_accum"]._replace(
+            probes=({"t": 1024, "n": 512},),
+            candidates=lambda p: [
+                Candidate(blocks, 10 * 2 ** 30, 0.0)])   # 10 GiB model
+        got = check_contract(bad)
+        assert _rules(got) == ["contract-vmem"]
+
+    def test_kernel_rejecting_blocks_is_an_abstract_eval_finding(self):
+        # forgetting the wrapper's padding: 300 tokens against bt=256
+        # trips the kernel's own divisibility assert at trace time
+        def raw_eval(probe, blocks):
+            x = jax.ShapeDtypeStruct((probe["t"], probe["n"]),
+                                     jnp.float32)
+            return jax.eval_shape(
+                lambda a, b: cov_kernel(a, b, bi=blocks["bi"],
+                                        bt=blocks["bt"]), x, x)
+
+        bad = CONTRACTS["cov_accum"]._replace(
+            probes=({"t": 300, "n": 128},),
+            candidates=lambda p: [
+                Candidate({"bt": 256, "bi": 128}, 10_000, 0.0)],
+            abstract_eval=raw_eval)
+        got = check_contract(bad)
+        assert "contract-abstract-eval" in _rules(got)
+        assert any("failed abstract eval" in f.message for f in got)
+
+    def test_output_shape_drift_caught(self):
+        bad = CONTRACTS["cov_accum"]._replace(
+            probes=({"t": 512, "n": 256},),
+            candidates=lambda p: [
+                Candidate({"bt": 512, "bi": 256}, 10_000, 0.0)],
+            expected=lambda p, b: jax.ShapeDtypeStruct((1, 1),
+                                                       jnp.float32))
+        got = check_contract(bad)
+        assert _rules(got) == ["contract-abstract-eval"]
+        assert any("expectation" in f.message for f in got)
+
+    def test_orphaned_lattice_is_a_registry_finding(self, monkeypatch):
+        monkeypatch.setitem(autotune._LATTICES, "ghost_kernel",
+                            {"bt": (128,)})
+        monkeypatch.setitem(autotune._ANCHORS, "ghost_kernel",
+                            {"bt": 128})
+        got = check_kernel_contracts()
+        assert any(f.rule == "contract-registry"
+                   and "ghost_kernel" in f.message for f in got)
+
+
+class TestContractProbesExerciseUnalignedShapes:
+    def test_every_contract_has_an_unaligned_probe(self):
+        # the padding arithmetic is where the historical bugs lived: each
+        # contract must keep at least one probe with a non-lane-multiple
+        # problem dim so the abstract-eval mirrors real ragged calls
+        for name, contract in CONTRACTS.items():
+            assert any(any(v % 128 != 0 for v in probe.values())
+                       for probe in contract.probes), name

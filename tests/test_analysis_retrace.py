@@ -1,0 +1,142 @@
+"""Retrace sentinel: trace budgets hold on the canonical tiny workloads,
+the sentinel fails when a budget is exceeded, and the scanned refinement
+path stays host-sync-free (PR 2/4's dispatch wins, enforced).
+
+Budgets live in src/repro/analysis/trace_budgets.json, measured cold
+(``reset_entry_caches``) on exactly the workloads below — raising one is
+a deliberate diff, not a flaky rerun.
+"""
+
+import jax
+import pytest
+
+from repro.analysis import retrace
+from repro.core import refine as RF
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _problem(n_batches=3, rows=16, n=8):
+    w_true = jax.random.normal(KEY, (n, n))
+    xs = [(jax.random.normal(jax.random.PRNGKey(i), (rows, n)), None)
+          for i in range(n_batches)]
+    ys = [x @ w_true for x, _ in xs]
+    params = {"w": w_true + 0.3 * jax.random.normal(KEY, (n, n))}
+
+    def apply_fn(p, x, aux):
+        return x @ p["w"]
+
+    return apply_fn, params, xs, ys
+
+
+def _run(scan):
+    fn, params, xs, ys = _problem()
+    return RF.refine_unit(fn, dict(params), xs, ys, epochs=4, scan=scan)
+
+
+class TestBudgetsHold:
+    @pytest.mark.trace_budget("refine_scan_tiny")
+    def test_scan_workload_within_budget(self):
+        _, history = _run(scan=True)
+        assert history["mode"] == "scan"
+
+    @pytest.mark.trace_budget("refine_loop_tiny")
+    def test_loop_workload_within_budget(self):
+        _, history = _run(scan=False)
+        assert history["mode"] == "loop"
+
+
+class TestScanPathIsSyncFree:
+    def test_scan_never_traces_the_per_step_loop_fns(self, trace_sentinel):
+        # the sync-free contract: the scanned schedule may only touch the
+        # scanned entry points — one trace each, zero for the per-batch
+        # fns whose every call is a blocking float() in the driver
+        _, history = _run(scan=True)
+        delta = trace_sentinel.delta()
+        assert set(delta) <= {"refine.run_all", "refine.eval_scan"}
+        assert delta.get("refine.run_all") == 1
+        assert delta.get("refine.eval_scan") == 1
+        # 3 dispatches total: pre-eval, the whole schedule, post-eval
+        assert history["dispatches"] == 3
+
+    def test_loop_path_reuses_one_trace_per_fn(self, trace_sentinel):
+        _, history = _run(scan=False)
+        delta = trace_sentinel.delta()
+        assert set(delta) == {"refine.step1", "refine.eval1"}
+        assert delta == {"refine.step1": 1, "refine.eval1": 1}
+        # 4 epochs × 3 steps + 2 × 3 eval batches — all on 2 traces
+        assert history["dispatches"] == 18
+
+
+@pytest.mark.slow
+class TestCompressBudgets:
+    """Whole-pipeline budgets: the memoization wins (6 unit_apply traces,
+    4 sweeps, ONE refine schedule trace across all units) are regressions
+    now, not benchmarks."""
+
+    def _setup(self):
+        from repro.configs import get_smoke_config
+        from repro.data import calibration_set
+        from repro.models import model as M
+        cfg = get_smoke_config("llama-7b").replace(dtype="float32")
+        params = M.init_params(cfg, KEY)
+        return cfg, params, calibration_set(cfg, 8, 32)
+
+    @pytest.mark.trace_budget("compress_smoke")
+    def test_sequential_compress_within_budget(self):
+        from repro.core import CompressConfig, compress_model
+        cfg, params, calib = self._setup()
+        compress_model(params, cfg, calib,
+                       CompressConfig(ratio=0.6, refine_epochs=3,
+                                      rank_multiple=1))
+
+    @pytest.mark.trace_budget("compress_smoke_scan")
+    def test_scan_compress_within_budget(self):
+        from repro.core import CompressConfig, compress_model
+        cfg, params, calib = self._setup()
+        compress_model(params, cfg, calib,
+                       CompressConfig(ratio=0.6, refine_epochs=3,
+                                      rank_multiple=1, scan_collect=True,
+                                      refine_scan=True))
+
+
+class TestSentinelMechanics:
+    def test_budget_exceeded_raises_with_overage(self):
+        retrace.reset_entry_caches()
+        with pytest.raises(retrace.TraceBudgetError) as exc:
+            with retrace.TraceSentinel(budgets={"refine.step1": 0,
+                                                "refine.eval1": 1}):
+                _run(scan=False)
+        msg = str(exc.value)
+        assert "refine.step1: traced 1x, budget 0" in msg
+        assert "refine.eval1" not in msg            # within budget
+
+    def test_zero_budget_asserts_never_traced(self):
+        retrace.reset_entry_caches()
+        with retrace.TraceSentinel(budgets={"refine.step1": 0}):
+            _run(scan=True)                         # scan: step1 untouched
+
+    def test_cold_start_retraces_warm_does_not(self):
+        # the memoization key includes apply_fn: a warm rerun must pass
+        # the SAME callable (pipeline guarantees this via make_unit_apply)
+        fn, params, xs, ys = _problem()
+        with retrace.TraceSentinel(budgets={}, cold=True) as s:
+            RF.refine_unit(fn, dict(params), xs, ys, epochs=4, scan=True)
+        assert s.delta().get("refine.run_all") == 1
+        with retrace.TraceSentinel(budgets={}) as warm:    # caches kept
+            RF.refine_unit(fn, dict(params), xs, ys, epochs=4, scan=True)
+        assert warm.delta() == {}                   # fully memoized
+
+    def test_counted_rejects_unregistered_entry_point(self):
+        with pytest.raises(ValueError, match="unknown trace entry point"):
+            retrace.counted("nope.fn", lambda: None)
+
+    def test_unknown_workload_lists_known_ones(self):
+        with pytest.raises(KeyError, match="refine_scan_tiny"):
+            retrace.load_budgets("no_such_workload")
+
+    def test_budget_keys_validated_against_registry(self, tmp_path):
+        bad = tmp_path / "b.json"
+        bad.write_text('{"workloads": {"w": {"ghost.fn": 1}}}')
+        with pytest.raises(ValueError, match="ghost.fn"):
+            retrace.load_budgets("w", path=str(bad))

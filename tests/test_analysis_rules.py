@@ -1,0 +1,185 @@
+"""repro-check AST rules: every rule fires on its seeded-violation
+fixture (true positives) and stays silent on the near-miss clean twin
+(true negatives) — plus the repo-clean gate and the CLI contract.
+
+Fixtures live in tests/fixtures/analysis/; they are linted as TEXT, never
+imported, so seeded bugs cannot leak into the suite.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import repro.analysis as A
+from repro.analysis import dispatch, shard_specs
+from repro.analysis.findings import Allowlist, Finding, apply_allowlist
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "analysis"
+SRC = pathlib.Path(A.default_root())
+
+
+def _dispatch(name, **kw):
+    return dispatch.check_file(str(FIXTURES / name), **kw)
+
+
+def _shard(name):
+    return shard_specs.check_file(str(FIXTURES / name))
+
+
+def _rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+class TestDispatchRules:
+    def test_host_sync_traced_fires(self):
+        got = _dispatch("host_sync_traced_bad.py")
+        assert _rules(got) == ["host-sync-traced"] * 3
+
+    def test_host_sync_traced_clean(self):
+        assert _dispatch("host_sync_traced_ok.py") == []
+
+    def test_host_sync_loop_fires(self):
+        got = _dispatch("host_sync_loop_bad.py")
+        assert _rules(got) == ["host-sync-loop"] * 4
+
+    def test_host_sync_loop_clean(self):
+        assert _dispatch("host_sync_loop_ok.py") == []
+
+    def test_jit_cache_key_fires(self):
+        got = _dispatch("jit_cache_key_bad.py")
+        assert _rules(got) == ["jit-cache-key"] * 2
+
+    def test_jit_cache_key_clean(self):
+        assert _dispatch("jit_cache_key_ok.py") == []
+
+    def test_donated_reuse_fires(self):
+        got = _dispatch("donated_reuse_bad.py")
+        assert _rules(got) == ["donated-reuse"] * 2
+        assert any("state" in f.message for f in got)
+        assert any("argnum 1" in f.message for f in got)
+
+    def test_donated_reuse_clean(self):
+        assert _dispatch("donated_reuse_ok.py") == []
+
+    def test_print_hot_fires(self):
+        got = _dispatch("print_hot_bad.py", hot=True)
+        assert _rules(got) == ["print-hot"] * 2
+
+    def test_print_in_traced_body_fires_even_in_cli_code(self):
+        got = _dispatch("print_hot_bad.py", hot=False)
+        assert _rules(got) == ["print-hot"]
+
+    def test_print_hot_clean(self):
+        assert _dispatch("print_hot_ok.py", hot=False) == []
+
+    def test_bare_except_fires(self):
+        got = _dispatch("bare_except_bad.py")
+        # two blanket handlers + one reasonless marker (which does NOT
+        # suppress its own line's finding)
+        assert _rules(got) == ["allow-no-reason"] + ["bare-except"] * 3
+
+    def test_bare_except_clean(self):
+        assert _dispatch("bare_except_ok.py") == []
+
+    def test_hot_inferred_from_package_path(self):
+        assert dispatch._is_hot("src/repro/core/refine.py")
+        assert dispatch._is_hot("src/repro/kernels/ops.py")
+        assert not dispatch._is_hot("src/repro/launch/train.py")
+        assert not dispatch._is_hot("src/repro/analysis/__main__.py")
+
+
+class TestShardSpecRules:
+    def test_seeded_violations_fire(self):
+        got = _shard("shard_specs_bad.py")
+        assert _rules(got) == ["bad-mesh-axis", "raw-unreplicated-shardmap",
+                               "shardmap-no-psum"]
+        bad_axis = next(f for f in got if f.rule == "bad-mesh-axis")
+        assert "'batch'" in bad_axis.message
+
+    def test_clean_twin(self):
+        assert _shard("shard_specs_ok.py") == []
+
+
+class TestAllowlist:
+    def test_marker_on_line_and_line_above(self):
+        src = ("x = 1  # repro-check: allow[some-rule] — reason\n"
+               "y = 2\n"
+               "# repro-check: allow[other-rule] — reason\n"
+               "z = 3\n")
+        allow = Allowlist("f.py", src)
+        assert allow.allows("some-rule", 1)
+        assert allow.allows("some-rule", 2)    # marker-above coverage
+        assert allow.allows("other-rule", 4)
+        assert not allow.allows("some-rule", 3)
+        assert not allow.allows("other-rule", 1)
+
+    def test_rule_must_match_unless_star(self):
+        allow = Allowlist("f.py", "x  # repro-check: allow[*] — generated\n")
+        assert allow.allows("anything", 1)
+        allow = Allowlist("f.py", "x  # repro-check: allow[a-rule] — r\n")
+        assert not allow.allows("b-rule", 1)
+
+    def test_empty_reason_is_a_finding_and_no_suppression(self):
+        allow = Allowlist("f.py", "x = 1  # repro-check: allow[r]\n")
+        assert not allow.allows("r", 1)
+        kept = apply_allowlist([Finding("r", "f.py", 1, "m")], allow)
+        assert _rules(kept) == ["allow-no-reason", "r"]
+
+
+class TestRepoClean:
+    def test_ast_passes_clean_on_src(self):
+        findings = A.run([str(SRC)], kernel_contracts=False)
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_known_allowlisted_sites_are_markers_not_silence(self):
+        # the parity-loop syncs in refine.py are excused by markers the
+        # checker parses — deleting a marker must resurface the finding
+        refine = SRC / "core" / "refine.py"
+        text = refine.read_text()
+        assert text.count("repro-check: allow[host-sync-loop]") == 3
+        stripped = text.replace("repro-check: allow[host-sync-loop]",
+                                "was-allow")
+        got = dispatch.check_source(str(refine), stripped)
+        assert "host-sync-loop" in _rules(got)
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC.parent) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env)
+
+
+class TestCli:
+    def test_cli_exits_nonzero_on_findings(self):
+        proc = _cli("--no-contracts",
+                    str(FIXTURES / "host_sync_loop_bad.py"))
+        assert proc.returncode == 1
+        assert "[host-sync-loop]" in proc.stdout
+
+    def test_cli_clean_exit(self):
+        proc = _cli("--no-contracts",
+                    str(FIXTURES / "host_sync_loop_ok.py"))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "clean" in proc.stderr
+
+
+class TestBudgetFileValidation:
+    def test_checked_in_budget_file_is_valid(self):
+        from repro.analysis.retrace import BUDGET_FILE
+        assert A._check_budget_file(BUDGET_FILE) == []
+
+    def test_unknown_entry_point_is_a_finding(self, tmp_path):
+        bad = tmp_path / "budgets.json"
+        bad.write_text('{"workloads": {"w": {"nope.fn": 1}}}')
+        got = A._check_budget_file(str(bad))
+        assert _rules(got) == ["trace-budget-file"]
+
+    def test_syntax_error_reported_not_raised(self):
+        got = dispatch.check_source("f.py", "def broken(:\n")
+        assert _rules(got) == ["syntax-error"]
+        got = shard_specs.check_source("f.py", "def broken(:\n")
+        assert _rules(got) == ["syntax-error"]
