@@ -24,6 +24,15 @@ a child interpreter with 8 fake CPU devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``): per-device tapped
 forwards must drop by the DP degree while the compressed params stay within
 fp32 tolerance of the unsharded run.
+
+Drop-free claim (ISSUE 9): under ``moe_dispatch="dropfree"`` the grouped
+routing layout is batch-size-invariant, so BANK-BEARING MoE units fold
+their dp microbatches too — the one unit class ISSUE 3 had to exempt.  The
+``calib_forwards_dropfree_*`` rows measure the deepseek and kimi-k2 smoke
+substrates end-to-end at dp=8: per-device tapped forwards on the MoE unit
+must drop 64 -> 8 while the compressed factor pairs match the unsharded
+run as composed v@u maps (the whitened solve's per-direction scale gauge
+is not DP-invariant; the linear map is).
 """
 
 from __future__ import annotations
@@ -61,6 +70,133 @@ print("DPROW", rep8["calibration"]["calib_dp"],
       rep1["calibration"]["tapped_forwards"],
       rep8["calibration"]["tapped_forwards"], err)
 """
+
+
+_DROPFREE_CHILD = """
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_smoke_config
+from repro.core import CompressConfig, compress_model
+from repro.data import calibration_set
+from repro.launch.mesh import make_calib_mesh
+from repro.models import model as M
+
+cfg = get_smoke_config("__ARCH__").replace(dtype="float32")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+calib = calibration_set(cfg, 64, 32)
+base = CompressConfig(ratio=0.6, refine=False, rank_multiple=1,
+                      microbatch=2, calib_mode="fused",
+                      moe_dispatch="dropfree")
+ref_p, rep1 = compress_model(params, cfg, calib, base)
+dp_p, rep8 = compress_model(
+    params, cfg, calib,
+    dataclasses.replace(base, calib_mesh=make_calib_mesh()))
+f1 = [u["tapped_forwards"] for u in rep1["units"]
+      if u["kind"].endswith("_moe")][0]
+f8 = [u["tapped_forwards"] for u in rep8["units"]
+      if u["kind"].endswith("_moe")][0]
+
+# composed v@u maps: the DP-invariant quantity of each factor pair
+def maps(t, out):
+    if isinstance(t, dict):
+        if "u" in t and "v" in t:
+            out.append(np.matmul(np.asarray(t["v"]), np.asarray(t["u"])))
+        else:
+            for k in sorted(t):
+                maps(t[k], out)
+    elif isinstance(t, (list, tuple)):
+        for x in t:
+            maps(x, out)
+    else:
+        out.append(np.asarray(t))
+m1, m8 = [], []
+maps(ref_p, m1)
+maps(dp_p, m8)
+err = max(float(np.max(np.abs(a - b)) / max(float(np.max(np.abs(a))), 1e-9))
+          for a, b in zip(m1, m8))
+print("DFROW", rep8["calibration"]["calib_dp"], f1, f8, err)
+"""
+
+_DROPFREE_ARCHS = (("deepseek", "deepseek-v2-lite-16b"),
+                   ("kimi_k2", "kimi-k2-1t-a32b"))
+
+
+def dropfree_measurements(archs=_DROPFREE_ARCHS, timeout: int = 900):
+    """ISSUE 9 measurement: compress each MoE smoke substrate with
+    ``moe_dispatch="dropfree"`` unsharded and under a dp=8 calib mesh in a
+    fresh 8-device child interpreter.  Returns one dict per arch —
+    ``{"arch", "wall_s", "dp", "unsharded_forwards", "per_device_forwards",
+    "max_map_rel_err"}``, or ``{"arch", "error"}`` when the child fails —
+    shared by the CSV rows here and the BENCH_<n>.json artifact."""
+    import time
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = []
+    for short, arch in archs:
+        t0 = time.time()
+        try:
+            child = subprocess.run(
+                [sys.executable, "-c",
+                 _DROPFREE_CHILD.replace("__ARCH__", arch)],
+                env=env, capture_output=True, text=True, timeout=timeout)
+            line = next(l for l in child.stdout.splitlines()
+                        if l.startswith("DFROW"))
+            _, dp, f1, f8, err = line.split()
+            out.append({"arch": short, "wall_s": time.time() - t0,
+                        "dp": int(dp), "unsharded_forwards": int(f1),
+                        "per_device_forwards": int(f8),
+                        "max_map_rel_err": float(err)})
+        except Exception as e:  # keep the harness alive
+            out.append({"arch": short, "error": type(e).__name__})
+    return out
+
+
+def dropfree_claim(measurements) -> dict:
+    """The PASS/FAIL verdict shared by the CSV row and the artifact: on
+    every arch the MoE unit's per-device forwards drop by the full DP
+    degree (64 -> 8 at dp=8) and the composed-map error stays inside fp32
+    tolerance."""
+    details = []
+    ok = bool(measurements)
+    for m in measurements:
+        if "error" in m:
+            ok = False
+            details.append(f"{m['arch']} ERROR={m['error']}")
+            continue
+        good = (m["dp"] == 8 and m["unsharded_forwards"] == 64
+                and m["per_device_forwards"] * m["dp"]
+                == m["unsharded_forwards"]
+                and m["max_map_rel_err"] < 2e-3)
+        ok = ok and good
+        details.append(
+            f"{m['arch']} {m['unsharded_forwards']}->"
+            f"{m['per_device_forwards']}@dp={m['dp']} "
+            f"err={m['max_map_rel_err']:.1e}")
+    return {"name": "claim_I9_dropfree_bank_folding", "pass": ok,
+            "detail": "; ".join(details)}
+
+
+def _dropfree_rows() -> List[str]:
+    ms = dropfree_measurements()
+    rows = []
+    for m in ms:
+        if "error" in m:
+            rows.append(f"calib_forwards_dropfree_{m['arch']},0.0,"
+                        f"ERROR={m['error']}")
+        else:
+            rows.append(
+                f"calib_forwards_dropfree_{m['arch']},0.0,"
+                f"dp={m['dp']},per_device_forwards="
+                f"{m['per_device_forwards']},"
+                f"unsharded={m['unsharded_forwards']},"
+                f"max_map_rel_err={m['max_map_rel_err']:.2e}")
+    c = dropfree_claim(ms)
+    rows.append(f"{c['name']},0.0,{'PASS' if c['pass'] else 'FAIL'} "
+                f"({c['detail']})")
+    return rows
 
 
 def _dp_rows() -> List[str]:
@@ -134,4 +270,6 @@ def run(ctx) -> List[str]:
 
     # sharded collection (child interpreter: 8 fake CPU devices)
     rows.extend(_dp_rows())
+    # drop-free bank folding on the MoE substrates (ISSUE 9)
+    rows.extend(_dropfree_rows())
     return rows

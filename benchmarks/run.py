@@ -5,7 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          matrix) + adaptive-vs-uniform rank budgets at
                          aggressive ratios (claim_I5, ISSUE 5)
   error_evolution      — Figures 1/4 (per-depth MSE / cosine distance)
-  calibration_size     — Figure 3 (quality vs calibration budget)
+  calibration_size     — Figure 3 (quality vs calibration budget) + the
+                         streaming-engine forward counts, incl. the
+                         drop-free MoE bank-folding rows (ISSUE 9:
+                         dp=8 cuts per-device MoE forwards 64 -> 8)
   refine_speed         — stage-2 scanned-dispatch claim (ISSUE 4)
   memory_speedup       — App. B.3/B.4 + Table 4 (ratio math, params, serving)
   kernel_bench         — Pallas kernel motivations (traffic models + timings)

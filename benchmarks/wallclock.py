@@ -4,8 +4,11 @@ The tracked perf trajectory (ISSUE 6): times the REAL kernels — Mosaic on
 TPU, forced interpret mode on CPU (slow but the identical Pallas program,
 so block-shape effects are visible) — for autotuned-vs-default block
 shapes, plus the end-to-end stage-1 (calibration) and stage-2 (refinement)
-wall from a smoke compression, plus a shard_map fused-cov DP row measured
-in a child interpreter with 8 fake CPU devices.  Every run emits a
+wall from a smoke compression, plus a shard_map fused-cov DP row and the
+ISSUE 9 drop-free bank-folding rows (``calib_dropfree_fold_*``: dp=8
+calibration of the deepseek/kimi-k2 MoE smoke substrates, carrying
+``claim_I9_dropfree_bank_folding``) measured in child interpreters with
+8 fake CPU devices.  Every run emits a
 ``BENCH_<n>.json`` artifact (n = 1 + highest existing) whose schema is
 locked by ``benchmarks.bench_schema``, so each future PR's perf claims
 append to a machine-readable trajectory instead of vanishing into logs.
@@ -203,8 +206,21 @@ def collect(ctx: Optional[dict] = None, *, steps: int = 60,
             _env(REPRO_AUTOTUNE_CACHE=os.path.join(tmp, "autotune.json")):
         rows = _kernel_rows()
         rows.extend(_stage_rows(ctx, steps))
+        claims = []
         if dp_child:
             rows.append(_dp_row())
+            # drop-free bank folding (ISSUE 9): per-device MoE forwards
+            # fall by the DP degree on both MoE substrates
+            from benchmarks.calibration_size import (dropfree_claim,
+                                                     dropfree_measurements)
+            dropfree = dropfree_measurements()
+            for m in dropfree:
+                meta = {k: v for k, v in m.items()
+                        if k not in ("arch", "wall_s")}
+                rows.append({"name": f"calib_dropfree_fold_{m['arch']}",
+                             "us": m.get("wall_s", 0.0) * 1e6,
+                             "meta": meta})
+            claims.append(dropfree_claim(dropfree))
         from repro.kernels import autotune
         autotune.reset()
 
@@ -226,7 +242,7 @@ def collect(ctx: Optional[dict] = None, *, steps: int = 60,
             "name": "claim_I6_autotuned_blocks_not_slower",
             "pass": all(checks),
             "detail": "; ".join(details),
-        }],
+        }] + claims,
         "wall_s": round(time.time() - t0, 2),
     }
     problems = validate(doc)

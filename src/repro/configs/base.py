@@ -39,6 +39,15 @@ class MoEConfig:
     dense_d_ff: int = 0              # hidden size of those dense blocks
     router_noise: float = 0.0
     aux_loss_coef: float = 0.001
+    # dispatch = how routed tokens reach their experts:
+    #   capacity — Switch-style fixed (E, C, d) buffer; tokens past the
+    #              per-expert capacity C = ceil(T·k/E · capacity_factor)
+    #              are DROPPED, so outputs depend on batch size;
+    #   dropfree — sort + segment-sum over a ragged (T·k, d) layout; no
+    #              drops, outputs exactly batch-size-invariant (the
+    #              property that lets calibration fold microbatches by dp).
+    dispatch: str = "capacity"       # capacity | dropfree
+    capacity_factor: float = 1.25    # capacity dispatch only
 
 
 @dataclass(frozen=True)

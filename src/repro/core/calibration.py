@@ -9,8 +9,18 @@ Covariances are accumulated in fp32 over token batches:
 with X given as rows (tokens, n).  Cost per batch is 3 rank-l updates of an
 n×n matrix — one MXU-bound GEMM stream; memory is 3·n² fp32 regardless of
 calibration size.  Expert banks accumulate per-expert covariances
-((E, n, n)) from the routed capacity buffers — zero-padded slots contribute
-zero outer products, so no masking is needed.
+((E, n, n)) in one of two layouts, keyed by the tapped activation's rank:
+
+* capacity buffers — (E, C, n) routed slabs from ``dispatch="capacity"``;
+  zero-padded slots contribute zero outer products, so no masking is
+  needed (``ops.cov_accum_banked``);
+* grouped rows — (R, n) choice-major routed rows from
+  ``dispatch="dropfree"`` plus an (R,) expert-id vector; rows are binned
+  by id via segment sums (``ops.cov_accum_grouped``).  Because the rows
+  are exactly the surviving T·k choices (nothing dropped, nothing
+  padded), the accumulated triple is batch-size invariant — splitting a
+  calibration batch into microbatches and summing gives bit-comparable
+  fp32 results, which is what legalizes DP folding for bank units.
 
 All three products are computed by ``kernels.ops.cov_accum`` /
 ``kernels.ops.cov_accum_banked``: the fused single-pass Pallas kernel on
@@ -47,12 +57,26 @@ def init_covs(n: int, experts: int = 0) -> Dict[str, jnp.ndarray]:
     }
 
 
+def ids_tap_name(tap: str) -> str:
+    """Tap name carrying the expert-id vector paired with a grouped
+    activation tap: sibling ``experts_ids`` in the same scope (e.g.
+    ``ffn/experts_in`` -> ``ffn/experts_ids``).  Both grouped MoE taps of a
+    unit share one id vector — the ids come from the ORIGINAL stream so the
+    cross term stays a true per-expert pairing even when the compressed
+    stream's router would have chosen differently."""
+    return tap.rsplit("/", 1)[0] + "/experts_ids"
+
+
 @functools.partial(jax.jit, static_argnames=("mesh",))
 def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
-                xp: jnp.ndarray, mesh=None) -> Dict[str, jnp.ndarray]:
+                xp: jnp.ndarray, mesh=None,
+                ids: jnp.ndarray | None = None) -> Dict[str, jnp.ndarray]:
     """x, xp: (..., tokens, n) activations (original / shifted).  Leading
     axes beyond the last two are treated as expert/bank axes and must match
-    the accumulator shape.
+    the accumulator shape.  With a 3D accumulator and 2D activations,
+    ``ids`` (rows,) int32 must give each row's expert bin (the grouped
+    drop-free layout); with 3D activations the bank axis is positional and
+    ``ids`` must be None.
 
     ``mesh`` (static, hashable) marks the activations as data-parallel
     sharded over the mesh's data axes: the cov wrappers shard_map the fused
@@ -60,10 +84,18 @@ def update_covs(covs: Dict[str, jnp.ndarray], x: jnp.ndarray,
     psum per update (the sharded-calibration reduction), and the
     accumulated triple is constrained replicated.  Being a static jit arg
     keeps sharded and unsharded traces in separate cache entries."""
-    x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x
-    xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 2 else xp
     acc = (covs["xx"], covs["xxp"], covs["xpxp"])
-    if covs["xx"].ndim == 3:  # expert banks: (E, tokens, n)
+    if ids is not None:  # grouped rows: (..., R, n) + (..., R) ids
+        x = x.reshape(-1, x.shape[-1])
+        xp = xp.reshape(-1, xp.shape[-1])
+        ids = ids.reshape(-1)
+        experts = covs["xx"].shape[0]
+        xx, xxp, xpxp = ops.cov_accum_grouped(
+            x, xp, ids, experts, acc=acc, mesh=mesh)
+        count = covs["count"] + x.shape[0]
+    elif covs["xx"].ndim == 3:  # capacity banks: (E, tokens, n)
+        x = x.reshape((-1,) + x.shape[-2:]) if x.ndim > 3 else x
+        xp = xp.reshape((-1,) + xp.shape[-2:]) if xp.ndim > 3 else xp
         xx, xxp, xpxp = ops.cov_accum_banked(x, xp, acc=acc, mesh=mesh)
         count = covs["count"] + x.shape[-2]
     else:

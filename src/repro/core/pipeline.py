@@ -169,6 +169,33 @@ class CompressConfig:
     which ignores the mesh.  A degenerate mesh (DP degree 1) is treated as
     ``None``; a microbatch count not divisible by dp collects unfolded.
 
+    MoE routing (``moe_dispatch`` / ``moe_capacity_factor``) overrides the
+    model config's ``MoEConfig.dispatch`` / ``capacity_factor`` for the
+    whole run — the calibration forwards AND the compressed model:
+
+      * ``"inherit"`` (default) — use the model config as-is (seed parity).
+      * ``"capacity"`` — Switch-style fixed (E, C, d) buffers with C =
+        ceil(T·k/E · capacity_factor), floored at top_k identically in the
+        flat, EP, and decode-EP paths; overflow tokens are DROPPED, so the
+        forward depends on the batch split and bank units never fold under
+        ``calib_mesh``.  The measured per-unit drop rate lands in
+        ``report["calibration"]["moe_drop_rate"]``.
+      * ``"dropfree"`` — sort + segment-sum over the ragged (T·k, d) row
+        layout (``kernels.ops.grouped_matmul``): every routed choice is
+        processed and each row's output is independent of the rest of the
+        batch, so the MoE forward is exactly batch-size-invariant.  Bank
+        units then fold under ``calib_mesh`` like dense units (per-device
+        tapped forwards drop by dp), and ``rank_mode="adaptive"`` lifts
+        the bank's copy-count rank tie to PER-EXPERT ranks: each expert
+        becomes its own water-filling item (copies=1) with its own
+        whitened-spectrum tail, budget-exact under the same allocator
+        invariants.  The bank is still solved once (vmapped) at the
+        maximum allocated rank and each expert's factor tail is
+        zero-masked — the SVD factors are σ-descending, so the truncations
+        nest.  Physical storage keeps the stacked bank at the max rank;
+        the report carries both the logical (budget) and padded (stacked)
+        parameter counts (``ranks.bank_padded_cost``).
+
     Stage-2 block refinement (``core.refine``) is governed by the
     ``refine_*`` knobs:
 
@@ -238,6 +265,12 @@ class CompressConfig:
     #   None = auto (on for fused/hybrid or under calib_mesh, else off for
     #   sequential seed parity)
     calib_mesh: Any = None        # None | "auto" | Mesh — DP-sharded stage 1
+    moe_dispatch: str = "inherit"  # inherit | capacity | dropfree — override
+    #   MoEConfig.dispatch for the run; "dropfree" makes the MoE forward
+    #   batch-size-invariant (bank units fold under calib_mesh, adaptive
+    #   ranks go per-expert — see class docstring)
+    moe_capacity_factor: Optional[float] = None  # override
+    #   MoEConfig.capacity_factor (capacity dispatch only; None = inherit)
     debug_covs: bool = False      # snapshot per-tap covariances in the report
     verbose: bool = False         # INFO-level progress via logging
 
@@ -507,9 +540,10 @@ def _weight_rank(w, ccfg: CompressConfig) -> int:
 # adaptive rank allocation (rank_mode="adaptive")
 
 
-def _estimate_item(unit: "Unit", spec: LinearSpec, w, spectrum,
-                   k_uniform: int) -> Dict[str, Any]:
-    """One allocator input: the whitened-spectrum truncation-loss estimate
+def _estimate_items(unit: "Unit", spec: LinearSpec, w, spectrum,
+                    k_uniform: int, *,
+                    per_expert: bool = False) -> List[Dict[str, Any]]:
+    """Allocator inputs: the whitened-spectrum truncation-loss estimate
     of this linear at the uniform reference rank.  ``spectrum`` is the
     singular spectrum of the solved matrix, returned by the estimate
     sweep's solve itself (``solve_*_with_spectrum``) — the estimate costs
@@ -525,21 +559,39 @@ def _estimate_item(unit: "Unit", spec: LinearSpec, w, spectrum,
     "how much model does this rank protect" weighting.  Measured on the
     trained llama smoke substrate this definition beats uniform at ratios
     0.4 AND 0.2 where absolute tails lose at 0.4 (see
-    tests/test_adaptive.py + ROADMAP)."""
+    tests/test_adaptive.py + ROADMAP).
+
+    An expert bank is one pooled item (copies=E, rank tied across the
+    bank) — except under ``per_expert`` (drop-free dispatch), where every
+    expert becomes its own item (copies=1, tie extended by the expert
+    index) with its own relative tail from the vmapped spectrum: the
+    allocator shifts rank between experts of one bank exactly as it does
+    between layers, under the same budget invariants."""
+    section, si, _, ki = unit.where
+    base = {"unit": unit.name, "path": spec.path, "tap": spec.tap,
+            "shape": (w.shape[-1], w.shape[-2]),
+            "uniform_rank": k_uniform}
+    if per_expert and w.ndim == 3:
+        items = []
+        for e in range(w.shape[0]):
+            tail = LR.spectrum_tail_energy(spectrum[e], k_uniform)
+            total = LR.spectrum_tail_energy(spectrum[e], 0)
+            items.append(dict(
+                base, copies=1, expert=e,
+                tie=(section, si, ki, spec.path, e),
+                loss=(tail / max(total, 1e-30)) * int(w[e].size)))
+        return items
     tail = LR.spectrum_tail_energy(spectrum, k_uniform)
     total = LR.spectrum_tail_energy(spectrum, 0)
-    section, si, _, ki = unit.where
-    return {"unit": unit.name, "path": spec.path, "tap": spec.tap,
-            "shape": (w.shape[-1], w.shape[-2]),
-            "copies": w.shape[0] if w.ndim == 3 else 1,
-            "uniform_rank": k_uniform,
-            # iterations of one scanned stage restack onto a single
-            # stacked factor buffer, so their ranks are TIED: the
-            # allocator sees one item per (stage, kind-slot, path) with
-            # summed loss and copy count (non-scanned stages and shared
-            # blocks are singleton ties)
-            "tie": (section, si, ki, spec.path),
-            "loss": (tail / max(total, 1e-30)) * int(w.size)}
+    return [dict(
+        base, copies=w.shape[0] if w.ndim == 3 else 1,
+        # iterations of one scanned stage restack onto a single
+        # stacked factor buffer, so their ranks are TIED: the
+        # allocator sees one item per (stage, kind-slot, path) with
+        # summed loss and copy count (non-scanned stages and shared
+        # blocks are singleton ties)
+        tie=(section, si, ki, spec.path),
+        loss=(tail / max(total, 1e-30)) * int(w.size))]
 
 
 def _allocate_ranks(est: Dict[str, Any], ccfg: CompressConfig):
@@ -566,18 +618,58 @@ def _allocate_ranks(est: Dict[str, Any], ccfg: CompressConfig):
         ceil_ratio=ccfg.rank_ceil_ratio,
         copies=[ties[k]["copies"] for k in keys])
     by_tie = dict(zip(keys, ranks))
-    table = {(it["unit"], it["path"]): by_tie[it["tie"]] for it in items}
+    # per-expert items (drop-free banks) share one (unit, path) key: their
+    # table entry is the TUPLE of per-expert ranks in expert order (the
+    # solve sweep vmaps at max and masks each expert's factor tail)
+    table: Dict[Tuple[str, str], Any] = {}
+    per_exp: Dict[Tuple[str, str], Dict[int, int]] = {}
+    key_shape: Dict[Tuple[str, str], Tuple[int, int]] = {}
+    for it in items:
+        key = (it["unit"], it["path"])
+        key_shape[key] = it["shape"]
+        if "expert" in it:
+            per_exp.setdefault(key, {})[it["expert"]] = by_tie[it["tie"]]
+        else:
+            table[key] = by_tie[it["tie"]]
+    for key, by_e in per_exp.items():
+        table[key] = tuple(by_e[e] for e in range(len(by_e)))
     dense = sum(it["copies"] * it["shape"][0] * it["shape"][1]
                 for it in items)
     stored = sum(it["copies"] * R.rank_cost(*it["shape"], remap=ccfg.remap)
                  * by_tie[it["tie"]] for it in items)
+    # physical storage of a per-expert bank keeps the stacked buffers at
+    # the max allocated rank (zero-masked tails) — report both counts so
+    # the budget (logical) and the materialized (padded) sizes are visible
+    padded = stored
+    for key, ks in ((k, v) for k, v in table.items()
+                    if isinstance(v, tuple)):
+        logical, pad = R.bank_padded_cost(*key_shape[key], ks,
+                                          remap=ccfg.remap)
+        padded += pad - logical
     alloc = {"mode": "adaptive", "target_ratio": ccfg.ratio,
              "achieved_ratio": stored / dense,
              "budget_params": int(ccfg.ratio * dense),
-             "allocated_params": stored, "linears": len(items),
+             "allocated_params": stored, "padded_params": padded,
+             "linears": len(items),
              "rank_groups": len(keys),
              "min_rank": min(ranks), "max_rank": max(ranks)}
     return table, alloc
+
+
+def _mask_expert_tails(factors: Dict[str, jnp.ndarray],
+                       ks: Sequence[int]) -> Dict[str, jnp.ndarray]:
+    """Zero each expert's factor components beyond its allocated rank.
+
+    ``factors`` come from ONE vmapped solve at kmax = max(ks): v is
+    (E, n, kmax), u is (E, kmax, m), and the SVD factors are σ-descending,
+    so zeroing column j of v and row j of u removes exactly the rank-j
+    component — the per-expert truncations nest inside the kmax solve
+    (Eckart–Young at k_e per expert from the same decomposition)."""
+    kmax = factors["u"].shape[-2]
+    keep = (jnp.arange(kmax)[None, :]
+            < jnp.asarray(ks, jnp.int32)[:, None])          # (E, kmax)
+    return {"v": factors["v"] * keep[:, None, :].astype(factors["v"].dtype),
+            "u": factors["u"] * keep[:, :, None].astype(factors["u"].dtype)}
 
 
 def _merge_adaptive_report(report, rep1, est: Dict[str, Any],
@@ -589,7 +681,8 @@ def _merge_adaptive_report(report, rep1, est: Dict[str, Any],
     by_key = {(it["unit"], it["path"]): it for it in est["items"]}
     for u2, u1 in zip(report["units"], rep1["units"]):
         u2["tapped_forwards"] = u1["tapped_forwards"]
-        for field in ("replayed_groups", "replay_taps", "shift_drift"):
+        for field in ("replayed_groups", "replay_taps", "shift_drift",
+                      "moe_drop_rate"):
             if field in u1:
                 u2[field] = u1[field]
         drift_by_path = {lin["path"]: lin["shift_drift"]
@@ -604,6 +697,9 @@ def _merge_adaptive_report(report, rep1, est: Dict[str, Any],
                 lin["shift_drift"] = drift_by_path[lin["path"]]
     for field in ("tapped_forwards", "replayed_groups"):
         report["calibration"][field] = rep1["calibration"][field]
+    if "moe_drop_rate" in rep1["calibration"]:
+        report["calibration"]["moe_drop_rate"] = \
+            rep1["calibration"]["moe_drop_rate"]
     report["calibration"]["rank_mode"] = dict(
         alloc, estimate_forwards=rep1["calibration"]["tapped_forwards"])
 
@@ -680,6 +776,23 @@ def compress_model(params, cfg, calib: Dict[str, jnp.ndarray],
     if isinstance(ccfg.replay_taps, str) and ccfg.replay_taps != "auto":
         raise ValueError(f"unknown replay_taps {ccfg.replay_taps!r} "
                          "(expected a tuple of tap names or 'auto')")
+    if ccfg.moe_dispatch not in ("inherit", "capacity", "dropfree"):
+        raise ValueError(f"unknown moe_dispatch {ccfg.moe_dispatch!r} "
+                         "(expected 'inherit', 'capacity', or 'dropfree')")
+    # apply the MoE routing overrides ONCE at entry so every tapped
+    # forward, solve decision, and the returned compressed model agree on
+    # the effective dispatch (the default leaves cfg untouched — seed
+    # parity is bit-for-bit)
+    if cfg.moe is not None and cfg.moe.num_experts and (
+            ccfg.moe_dispatch != "inherit"
+            or ccfg.moe_capacity_factor is not None):
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe,
+            dispatch=(cfg.moe.dispatch if ccfg.moe_dispatch == "inherit"
+                      else ccfg.moe_dispatch),
+            capacity_factor=(cfg.moe.capacity_factor
+                             if ccfg.moe_capacity_factor is None
+                             else ccfg.moe_capacity_factor)))
     mesh = _resolve_calib_mesh(ccfg.calib_mesh)
     # scan-batched collection defaults on for fused/hybrid and whenever a
     # collection mesh is active (DP sharding rides the scan sweep);
@@ -814,6 +927,23 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
         unit_report = {"name": unit.name, "kind": unit.kind,
                        "calib_mode": ccfg.calib_mode, "linears": []}
 
+        if unit.kind.endswith("_moe") and covs_table is None:
+            # measured routing drop rate at this unit's calibration batch
+            # size: one direct tapped probe on the original stream (not
+            # routed through the engine, so it never pollutes the
+            # tapped_forwards accounting).  Drop-free dispatch never drops
+            # — statically zero, no probe needed.
+            if cfg.moe.dispatch == "dropfree":
+                unit_report["moe_drop_rate"] = 0.0
+            else:
+                _, probe = fwd_taps(
+                    orig_p, xs[0],
+                    None if dec_aux_o is None else dec_aux_o[0])
+                stat = probe.get("ffn/experts_dropped")
+                if stat is not None:
+                    dropped, total = jax.device_get(stat).tolist()
+                    unit_report["moe_drop_rate"] = dropped / max(total, 1.0)
+
         # ---- stage 1: streaming covariance accumulation + closed-form solve
         t_s1 = time.perf_counter()
         groups = tap_groups(linear_specs(unit.kind, cfg))
@@ -825,7 +955,9 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
         if ccfg.objective != "agnostic" and covs_table is None:
             engine = S.CalibrationEngine.for_unit(
                 groups, fwd_taps, orig_p, xs[0],
-                None if dec_aux_o is None else dec_aux_o[0], mesh=mesh)
+                None if dec_aux_o is None else dec_aux_o[0], mesh=mesh,
+                num_experts=(cfg.moe.num_experts
+                             if unit.kind.endswith("_moe") else 0))
             if ccfg.calib_mode == "fused":
                 anchors = engine.collect_fused(fwd_taps, orig_p, cur_p,
                                                xs, xps, dec_aux_o, dec_aux_c,
@@ -882,20 +1014,41 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
                     k = rank_table[(unit.name, spec.path)]
                 if est is not None:
                     # one decomposition serves both: the solve's own SVD
-                    # yields the spectrum the loss estimate reads
+                    # yields the spectrum the loss estimate reads.  Banks
+                    # routed drop-free estimate per expert — the dispatch
+                    # is batch-size-invariant, so per-expert ranks change
+                    # storage, never which tokens an expert sees
+                    per_expert = (spec.bank and w.ndim == 3
+                                  and cfg.moe is not None
+                                  and cfg.moe.dispatch == "dropfree")
                     factors, spectrum = _solve_weight(w, covs, k, ccfg,
                                                       want_spectrum=True)
-                    est["items"].append(
-                        _estimate_item(unit, spec, w, spectrum, k))
+                    est["items"].extend(_estimate_items(
+                        unit, spec, w, spectrum, k, per_expert=per_expert))
+                elif isinstance(k, tuple):
+                    # per-expert ranks: one vmapped solve at the max, each
+                    # expert's factor tail zero-masked (nested truncation)
+                    factors = _mask_expert_tails(
+                        _solve_weight(w, covs, max(k), ccfg), k)
                 else:
                     factors = _solve_weight(w, covs, k, ccfg)
                 new_p = {kk: vv for kk, vv in wp.items() if kk != "w"}
                 new_p.update(factors)
                 set_path(cur_p, spec.path, new_p)
-                entry = {"path": spec.path, "rank": k,
-                         "shape": list(w.shape),
-                         "ratio": R.achieved_ratio(w.shape[-1], w.shape[-2],
-                                                   k, remap=ccfg.remap)}
+                if isinstance(k, tuple):
+                    logical, pad = R.bank_padded_cost(
+                        w.shape[-1], w.shape[-2], k, remap=ccfg.remap)
+                    entry = {"path": spec.path, "rank": max(k),
+                             "rank_per_expert": list(k),
+                             "shape": list(w.shape),
+                             "ratio": logical / int(w.size),
+                             "padded_ratio": pad / int(w.size)}
+                else:
+                    entry = {"path": spec.path, "rank": k,
+                             "shape": list(w.shape),
+                             "ratio": R.achieved_ratio(
+                                 w.shape[-1], w.shape[-2], k,
+                                 remap=ccfg.remap)}
                 if drift is not None:
                     entry["shift_drift"] = drift
                 unit_report["linears"].append(entry)
@@ -1002,10 +1155,18 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
         # rank budget policy; adaptive runs overwrite this with the full
         # allocation summary (_merge_adaptive_report)
         "rank_mode": {"mode": ccfg.rank_mode},
+        # effective MoE routing after the CompressConfig overrides (None
+        # for dense models)
+        "moe_dispatch": (cfg.moe.dispatch if cfg.moe is not None
+                         and cfg.moe.num_experts else None),
         # stage-1 wall clock (collection + solves), summed over units —
         # the benchmark trajectory's stage-1 row reads this
         "wall": sum(u.get("calib_wall", 0.0) for u in report["units"]),
     }
+    drop_rates = {u["name"]: u["moe_drop_rate"] for u in report["units"]
+                  if "moe_drop_rate" in u}
+    if drop_rates:
+        report["calibration"]["moe_drop_rate"] = drop_rates
     refined = [u for u in report["units"] if "refine_wall" in u]
     report["refinement"] = {
         "scan": bool(refine_scan) if ccfg.refine else None,

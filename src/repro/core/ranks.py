@@ -64,6 +64,25 @@ def rank_cost(m: int, n: int, *, remap: bool = False) -> int:
     return max(m, n) if remap else (m + n)
 
 
+def bank_padded_cost(m: int, n: int, ranks: Sequence[int], *,
+                     remap: bool = False) -> Tuple[int, int]:
+    """(logical, padded) stored parameter counts of an expert bank with
+    per-expert ranks (drop-free adaptive allocation).
+
+    Logical = Σ_e cost·k_e — the budget the water-filler met, counting
+    each expert at its own rank.  Padded = E·cost·max(k_e) — the stacked
+    (E, n, kmax) / (E, kmax, m) factor buffers actually materialized: the
+    bank solves once (vmapped) at the max allocated rank and each expert's
+    factor tail is zero-masked in place, trading the logical/padded gap
+    for static shapes, one solve, and one grouped GEMM per bank.  The gap
+    is recoverable by per-expert re-slicing at export time; both counts
+    appear in the adaptive allocation report so the trade stays visible.
+    """
+    cost = rank_cost(m, n, remap=remap)
+    ranks = list(ranks)
+    return cost * sum(ranks), cost * len(ranks) * max(ranks)
+
+
 def _lattice_bottom(kmax: int, multiple: int) -> int:
     """Smallest allocatable rank.  Rank 1 stays on the lattice so a tight
     budget can always be respected; everything above the bottom is a lane

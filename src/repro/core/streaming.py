@@ -62,7 +62,11 @@ reduces them; the accumulator carry stays constrained replicated
 so it is bitwise-independent of the DP degree; the covariances themselves
 match the unsharded sweep to fp32 tolerance (token-row summation order
 changes).  A microbatch count not divisible by dp falls back to the
-unfolded sweep.
+unfolded sweep, as does any unit with a CAPACITY-routed expert bank
+(its forward is batch-size-dependent).  Drop-free (grouped) bank units
+fold normally — their dispatch processes exactly the T·k routed rows for
+any batch split, which is precisely what the drop-free mode buys
+calibration.
 
 The engine counts every tapped forward it issues (``stats``); the driver
 surfaces the counts in its per-unit report so benchmarks and tests can
@@ -161,8 +165,13 @@ def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
                 (x, xp), ao, ac = mb, None, None
             y, taps_o = fwd_taps(orig_p, x, ao)
             _, taps_c = fwd_taps(cur_p, xp, ac)
+            # grouped (drop-free) bank taps carry a sibling expert-id
+            # vector sown by the ORIGINAL stream; dense/capacity taps have
+            # no such sibling and get ids=None (the uniform lookup keeps
+            # one step body for every tap mode)
             new = {t: C.update_covs(carry[t], taps_o[t], taps_c[t],
-                                    mesh=mesh)
+                                    mesh=mesh,
+                                    ids=taps_o.get(C.ids_tap_name(t)))
                    for t in taps}
             return new, (y if keep_orig_outputs else jnp.zeros(()))
         return jax.lax.scan(step, covs, batch)
@@ -178,18 +187,21 @@ def _sweep_fn(fwd_taps: Callable, taps: Tuple[str, ...], have_aux: bool,
 class TapAccumulator:
     """Streaming covariance state for one tap.
 
-    Dense taps arrive as (B, L, n) activations, expert-bank taps as
-    (E, C, n) routed capacity buffers (zero-padded slots add zero outer
-    products); ``calibration.update_covs`` dispatches on the accumulator
-    shape, flattening dense inputs to token rows itself.
+    Dense taps arrive as (B, L, n) activations; expert-bank taps arrive
+    either as (E, C, n) routed capacity buffers (zero-padded slots add
+    zero outer products) or, under drop-free dispatch, as (T·k, n)
+    choice-major routed rows plus a sibling (T·k,) expert-id vector.
+    ``calibration.update_covs`` dispatches on the accumulator shape and
+    the presence of ``ids``, flattening dense inputs to token rows itself.
     """
 
     tap: str
     is_bank: bool
     covs: Dict[str, jnp.ndarray]
 
-    def update(self, a_act: jnp.ndarray, b_act: jnp.ndarray) -> None:
-        self.covs = C.update_covs(self.covs, a_act, b_act)
+    def update(self, a_act: jnp.ndarray, b_act: jnp.ndarray,
+               ids: Optional[jnp.ndarray] = None) -> None:
+        self.covs = C.update_covs(self.covs, a_act, b_act, ids=ids)
 
 
 class CalibrationEngine:
@@ -201,7 +213,8 @@ class CalibrationEngine:
     """
 
     def __init__(self, groups: Groups,
-                 shapes: Dict[str, jax.ShapeDtypeStruct], mesh=None):
+                 shapes: Dict[str, jax.ShapeDtypeStruct], mesh=None,
+                 num_experts: int = 0):
         self.groups = list(groups)
         # data-parallel collection mesh (None = single-device collection);
         # a degenerate mesh is treated as None so nothing is ever resharded
@@ -209,19 +222,32 @@ class CalibrationEngine:
                              and SH.dp_degree(mesh) > 1) else None
         # tap -> (is_bank, n, experts); accumulators materialize lazily so
         # sequential mode holds one group's 3·n² state at a time (seed peak
-        # memory) while fused mode grows to all taps as they stream in
+        # memory) while fused mode grows to all taps as they stream in.
+        # A bank tap sown as 2D rows is the GROUPED (drop-free) layout —
+        # (T·k, n) carries no expert axis, so E comes from ``num_experts``;
+        # a 3D bank tap is a routed (E, C, n) capacity buffer.
         self._spec: Dict[str, Tuple[bool, int, int]] = {}
+        has_capacity_bank = False
         for tap, group in self.groups:
             is_bank = group[0][2]
             sd = shapes[tap]
-            self._spec[tap] = (is_bank, sd.shape[-1],
-                               sd.shape[0] if is_bank else 0)
-        # routed expert banks make the unit forward BATCH-SIZE-DEPENDENT
-        # (capacity = ceil(tokens·k/E·factor) over the whole batch, overflow
-        # drops): folding dp microbatches into one forward would change
-        # which tokens drop, so bank-bearing units always collect unfolded
-        # — DP sharding must never change semantics, only placement
-        self._has_bank = any(spec[0] for spec in self._spec.values())
+            grouped = is_bank and len(sd.shape) == 2
+            if grouped and num_experts <= 0:
+                raise ValueError(
+                    f"grouped bank tap {tap!r} needs num_experts > 0")
+            experts = (num_experts if grouped
+                       else sd.shape[0] if is_bank else 0)
+            has_capacity_bank |= is_bank and not grouped
+            self._spec[tap] = (is_bank, sd.shape[-1], experts)
+        # CAPACITY-routed expert banks make the unit forward
+        # batch-size-dependent (capacity = ceil(tokens·k/E·factor) over the
+        # whole batch, overflow drops): folding dp microbatches into one
+        # forward would change which tokens drop, so such units always
+        # collect unfolded — DP sharding must never change semantics, only
+        # placement.  Drop-free (grouped) banks process exactly the T·k
+        # routed rows regardless of batch split, so they fold like dense
+        # taps — the point of the drop-free dispatch.
+        self._has_capacity_bank = has_capacity_bank
         self.accumulators: Dict[str, TapAccumulator] = {}
         self._released: Set[str] = set()
         # stacked microbatch streams, shared across this unit's scan sweeps
@@ -232,11 +258,14 @@ class CalibrationEngine:
 
     @classmethod
     def for_unit(cls, groups: Groups, fwd_taps: Callable, params,
-                 x0, aux0, mesh=None) -> "CalibrationEngine":
+                 x0, aux0, mesh=None,
+                 num_experts: int = 0) -> "CalibrationEngine":
         """Build the registry from one shape-only tap discovery (no data
-        touched): every accumulator's final size is known up front."""
+        touched): every accumulator's final size is known up front.
+        ``num_experts`` sizes grouped (drop-free) bank accumulators, whose
+        sown (T·k, n) rows carry no expert axis to infer E from."""
         shapes = L.tap_shapes(fwd_taps, params, x0, aux0)
-        return cls(groups, shapes, mesh=mesh)
+        return cls(groups, shapes, mesh=mesh, num_experts=num_experts)
 
     def _acc(self, tap: str) -> TapAccumulator:
         if tap in self._released:
@@ -264,7 +293,8 @@ class CalibrationEngine:
         for tap in self._spec:
             if only is not None and tap not in only:
                 continue
-            self._acc(tap).update(taps_orig[tap], taps_shift[tap])
+            self._acc(tap).update(taps_orig[tap], taps_shift[tap],
+                                  ids=taps_orig.get(C.ids_tap_name(tap)))
             self.stats["tap_updates"] += 1
 
     def _tapped(self, fwd_taps, p, x, aux):
@@ -335,11 +365,12 @@ class CalibrationEngine:
         if n_uni >= 1 and (taps or keep_orig_outputs):
             # data-parallel: fold dp microbatches per scan step so each DP
             # worker sweeps its own share (per-device forwards drop by dp);
-            # a prefix not divisible by dp — or a bank-bearing unit, whose
-            # routed-capacity forward is batch-size-dependent — keeps the
-            # unfolded sweep
+            # a prefix not divisible by dp — or a CAPACITY-bank unit, whose
+            # routed forward is batch-size-dependent — keeps the unfolded
+            # sweep (drop-free bank units fold: their dispatch is exactly
+            # batch-size-invariant)
             fold = 1
-            if self.mesh is not None and not self._has_bank:
+            if self.mesh is not None and not self._has_capacity_bank:
                 dp = SH.dp_degree(self.mesh)
                 if n_uni % dp == 0:
                     fold = dp

@@ -60,6 +60,7 @@ _ANCHORS = {
     "lowrank_matmul": {"bt": 256, "bn": 512, "bm": 256},
     "flash_attention": {"bq": 256, "bk": 256},
     "flash_decode": {"bk": 256},
+    "grouped_matmul": {"bm": 128, "bf": 256},
 }
 
 # candidate lattices (per block dim).  Small on purpose: measurement cost
@@ -71,6 +72,9 @@ _LATTICES = {
                        "bm": (128, 256, 512)},
     "flash_attention": {"bq": (128, 256, 512), "bk": (128, 256, 512)},
     "flash_decode": {"bk": (128, 256, 512, 1024)},
+    # row blocks small: the ragged tiling revisits a (bm, bf) output block
+    # once per expert straddling it, so oversized bm multiplies revisits
+    "grouped_matmul": {"bm": (128, 256, 512), "bf": (128, 256, 512)},
 }
 
 _LANE = 128          # last-dim tile multiple (fp32 8×128, bf16 16×128)
@@ -278,6 +282,29 @@ def lowrank_candidates(t: int, n: int, k: int, m: int, dtype=jnp.float32,
     return sorted(out, key=lambda c: _prefer("lowrank_matmul", c))
 
 
+def grouped_candidates(m: int, d: int, f: int, e: int,
+                       dtype=jnp.float32) -> List[Candidate]:
+    """(bm, bf) lattice for the grouped expert GEMM on (m, d) sorted rows ×
+    (e, d, f) banks.  VMEM: double-buffered x (bm, d) + W (d, bf) tiles
+    plus the fp32 (bm, bf) resident output block; the contraction dim d is
+    not tiled (it rides whole in each tile), so big-d problems thin the
+    lattice toward small blocks."""
+    out = []
+    eb = _bytes(dtype)
+    lat = _LATTICES["grouped_matmul"]
+    for bm in _pick_valid(m, lat["bm"], 8):
+        for bf in _pick_valid(f, lat["bf"], _LANE):
+            vmem = 2 * ((bm * d + d * bf) * eb + bm * bf * 4)
+            waste = (_round_up(m, bm) * _round_up(f, bf)) / (m * f) - 1
+            if vmem <= _vmem_budget():
+                out.append(Candidate({"bm": bm, "bf": bf}, vmem, waste))
+    if not out:
+        bm, bf = min(lat["bm"]), min(lat["bf"])
+        out = [Candidate({"bm": bm, "bf": bf},
+                         2 * ((bm * d + d * bf) * eb + bm * bf * 4), 0.0)]
+    return sorted(out, key=lambda c: _prefer("grouped_matmul", c))
+
+
 def flash_candidates(lq: int, lk: int, d: int,
                      dtype=jnp.float32) -> List[Candidate]:
     """(bq, bk) lattice for flash attention.  VMEM: double-buffered q/o
@@ -435,6 +462,31 @@ def lowrank_blocks(t: int, n: int, k: int, m: int, *, dtype=jnp.float32,
                 (x, v, u, bias, res))
 
     return _tune("lowrank_matmul", sig, cands, thunk, mode, interpret)
+
+
+def grouped_blocks(m: int, d: int, f: int, e: int, *, dtype=jnp.float32,
+                   mode: str = "auto",
+                   interpret: bool = False) -> TuneResult:
+    """Blocks for the grouped expert GEMM (d lane-padded by the caller;
+    rows and f are padded up to the pick).  The probe routes rows evenly
+    across the e groups — the balanced case every MoE load-balance loss
+    pushes toward."""
+    cands = grouped_candidates(m, d, f, e, dtype)
+    sig = f"m{m}-d{d}-f{f}-e{e}-{jnp.dtype(dtype).name}"
+
+    def thunk(c: Candidate):
+        from repro.kernels.grouped_matmul import grouped_matmul as kern
+        bm, bf = c.blocks["bm"], c.blocks["bf"]
+        mp, fp_ = _round_up(m, bm), _round_up(f, bf)
+        x = jnp.ones((mp, d), dtype)
+        w = jnp.ones((e, d, fp_), dtype)
+        gs = jnp.full((e,), m // e, jnp.int32)
+        gs = gs.at[0].add(m - int(m // e) * e)
+        return (lambda a, b, g: kern(a, b, g, bm=min(bm, mp),
+                                     bf=min(bf, fp_), interpret=interpret),
+                (x, w, gs))
+
+    return _tune("grouped_matmul", sig, cands, thunk, mode, interpret)
 
 
 def flash_blocks(b: int, h: int, kv: int, lq: int, lk: int, d: int, *,

@@ -35,6 +35,7 @@ from repro.kernels import autotune
 from repro.kernels.cov_accum import cov_accum as _cov_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.flash_decode import flash_decode as _decode_kernel
+from repro.kernels.grouped_matmul import grouped_matmul as _grouped_kernel
 from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
 
 _LANE = autotune._LANE          # 128
@@ -242,6 +243,50 @@ _DECODE = KernelContract(
 )
 
 
+# ---------------------------------------------------------------------------
+# grouped_matmul — ragged expert GEMM over segment-sorted (M, d) rows
+
+
+def _gm_dims(p, blocks):
+    mp = _ru(p["m"], blocks["bm"])
+    dl = _rl(p["d"])
+    fp_ = _ru(_rl(p["f"]), blocks["bf"])
+    return mp, dl, fp_
+
+
+def _gm_abstract(p, blocks):
+    mp, dl, fp_ = _gm_dims(p, blocks)
+    x = _struct((mp, dl))
+    w = _struct((p["e"], dl, fp_))
+    gs = _struct((p["e"],), jnp.int32)
+    return jax.eval_shape(
+        lambda a, b, g: _grouped_kernel(
+            a, b, g, bm=min(blocks["bm"], mp), bf=min(blocks["bf"], fp_)),
+        x, w, gs)
+
+
+def _gm_expected(p, blocks):
+    mp, _, fp_ = _gm_dims(p, blocks)
+    return _struct((mp, fp_))
+
+
+_GROUPED = KernelContract(
+    name="grouped_matmul",
+    align={"bm": _SUBLANE, "bf": _LANE},
+    probes=(
+        {"m": 4096, "d": 2048, "f": 1408, "e": 64},   # deepseek-shaped
+        {"m": 37, "d": 80, "f": 96, "e": 8},          # ragged everything:
+        # rows far under a block, unaligned d/f — the drop-free smoke path
+        {"m": 8, "d": 128, "f": 128, "e": 256},       # more experts than
+        # rows: most groups empty, tile list dominated by sentinels
+    ),
+    candidates=lambda p: autotune.grouped_candidates(
+        p["m"], _rl(p["d"]), p["f"], p["e"]),
+    abstract_eval=_gm_abstract,
+    expected=_gm_expected,
+)
+
+
 CONTRACTS: Dict[str, KernelContract] = {
-    c.name: c for c in (_COV, _LOWRANK, _FLASH, _DECODE)
+    c.name: c for c in (_COV, _LOWRANK, _FLASH, _DECODE, _GROUPED)
 }

@@ -27,6 +27,7 @@ from repro.kernels import autotune, ref
 from repro.kernels.cov_accum import cov_accum as _cov_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.flash_decode import flash_decode as _flash_decode_kernel
+from repro.kernels.grouped_matmul import grouped_matmul as _grouped_kernel
 from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_kernel
 
 
@@ -46,6 +47,7 @@ REGISTERED_KERNELS: Dict[str, str] = {
     "cov_accum_banked": "cov_accum",
     "flash_attention": "flash_attention",
     "flash_decode": "flash_decode",
+    "grouped_matmul": "grouped_matmul",
 }
 
 
@@ -102,6 +104,36 @@ def lowrank_matmul(x, v, u, *, bias=None, residual=None,
     y = _lowrank_kernel(xf, v, u, bf, rf, bt=bt, bn=bn, bm=bm,
                         interpret=interpret)
     return y[:t0, :m0].reshape(*lead, m0)
+
+
+def grouped_matmul(x, w, group_sizes, *, out_dtype=None,
+                   force_pallas: bool = False, interpret: bool = False):
+    """Grouped (ragged) expert GEMM: x (M, d) rows sorted by group, w
+    (E, d, f) expert bank, group_sizes (E,) int32 summing to M -> (M, f).
+
+    Row i contracts against W[group(i)] only — a pure per-row function, so
+    the drop-free MoE dispatch built on it is exactly batch-size-invariant.
+    fp32 accumulation; output cast to ``out_dtype`` (default x.dtype).
+    Pallas on TPU (megablox-style ragged tiling over the sorted segments —
+    see ``kernels/grouped_matmul.py``), ``jax.lax.ragged_dot`` elsewhere.
+    """
+    out_dtype = x.dtype if out_dtype is None else out_dtype
+    if not (use_pallas() or force_pallas):
+        return ref.grouped_matmul_ref(x, w, group_sizes).astype(out_dtype)
+    m0, _ = x.shape
+    e, _, f0 = w.shape
+    # lane-align the contraction dim (zero columns are exact no-ops)
+    x, _ = _pad_dim(x, 1, 128)
+    w, _ = _pad_dim(w, 1, 128)
+    tune = autotune.grouped_blocks(m0, x.shape[1], f0, e, dtype=x.dtype,
+                                   interpret=interpret)
+    bm, bf = tune.blocks["bm"], tune.blocks["bf"]
+    # padded rows belong to no segment — the kernel's row mask zeroes them
+    x, _ = _pad_dim(x, 0, bm)
+    w, _ = _pad_dim(w, 2, bf)
+    y = _grouped_kernel(x, w, group_sizes, bm=min(bm, x.shape[0]),
+                        bf=min(bf, w.shape[2]), interpret=interpret)
+    return y[:m0, :f0].astype(out_dtype)
 
 
 def _accumulate(outs, acc, mesh=None):
@@ -224,6 +256,79 @@ def cov_accum_banked(x, xp, *, acc=None, mesh=None,
     if mesh is None:
         return _accumulate(fn(x, xp), acc)
     return _accumulate(_sharded_triple(fn, x, xp, mesh, 1), acc, mesh)
+
+
+def _cov_triple_grouped(x, xp, ids, experts: int, chunk: int = 0):
+    """Per-expert triple from routed rows: segment-sum of per-row outer
+    products, scanned in row chunks so the (chunk, n, n) intermediate stays
+    bounded.  ids index the ORIGINAL-stream routing for all three terms;
+    chunk-padding rows go to a sentinel bin that is sliced away."""
+    xf = x.astype(jnp.float32)
+    xpf = xp.astype(jnp.float32)
+    r, n = xf.shape
+    if chunk <= 0:
+        chunk = max(8, min(2048, (1 << 21) // max(n * n, 1) or 8))
+    pad = (-r) % chunk
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        xpf = jnp.pad(xpf, ((0, pad), (0, 0)))
+    ids = jnp.pad(ids.astype(jnp.int32), (0, pad),
+                  constant_values=experts)
+    nb = (r + pad) // chunk
+    xs = xf.reshape(nb, chunk, n)
+    xps = xpf.reshape(nb, chunk, n)
+    idb = ids.reshape(nb, chunk)
+
+    def step(acc, inp):
+        xc, xpc, ic = inp
+        seg = lambda a, b: jax.ops.segment_sum(
+            a[:, :, None] * b[:, None, :], ic,
+            num_segments=experts + 1)[:experts]
+        return (acc[0] + seg(xc, xc), acc[1] + seg(xc, xpc),
+                acc[2] + seg(xpc, xpc)), None
+
+    init = tuple(jnp.zeros((experts, n, n), jnp.float32) for _ in range(3))
+    outs, _ = jax.lax.scan(step, init, (xs, xps, idb))
+    return outs
+
+
+def cov_accum_grouped(x, xp, ids, experts: int, *, acc=None, mesh=None):
+    """Drop-free routed covariance triple: (R, n) choice-major rows x2 +
+    (R,) int32 expert ids -> (xx, xxp, xpxp) each (E, n, n) fp32.
+
+    The grouped analogue of ``cov_accum_banked`` for 2D drop-free taps:
+    rows pair positionally per (token, choice) across the two streams and
+    all three products bin by the original-stream ids.  Built on chunked
+    ``segment_sum`` (no Pallas kernel: the op is a rank-1-update stream
+    with data-dependent binning, and XLA's scatter-add lowering is already
+    MXU/VPU-bound at the accumulator shapes involved).  ``acc``
+    optionally supplies an existing triple to accumulate into; ``mesh``
+    shards the row axis over the DP workers with one psum per triple
+    element — zero padding rows contribute zero outer products whatever
+    bin they land in, so the fold is exact."""
+    n = x.shape[-1]
+    x = x.reshape(-1, n)
+    xp = xp.reshape(-1, n)
+    ids = ids.reshape(-1)
+    if mesh is None:
+        return _accumulate(_cov_triple_grouped(x, xp, ids, experts), acc)
+    from repro.distributed import sharding as SH
+    dp = SH.dp_axes(mesh)
+    deg = SH.dp_degree(mesh)
+    x, _ = _pad_dim(x, 0, deg)
+    xp, _ = _pad_dim(xp, 0, deg)
+    pad = x.shape[0] - ids.shape[0]
+    if pad:
+        ids = jnp.pad(ids, (0, pad))  # zero rows: any bin is exact
+    spec = P(dp, None)
+
+    def local(xs, xps, idl):
+        outs = _cov_triple_grouped(xs, xps, idl, experts)
+        return tuple(jax.lax.psum(o, dp) for o in outs)
+
+    fn = SH.data_shard_map(local, mesh, in_specs=(spec, spec, P(dp)),
+                           out_specs=(P(), P(), P()))
+    return _accumulate(fn(x, xp, ids), acc, mesh)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -31,6 +31,32 @@ def cov_accum_banked_ref(x, xp):
     return upd(xf, xf), upd(xf, xpf), upd(xpf, xpf)
 
 
+def grouped_matmul_ref(x, w, group_sizes):
+    """Grouped expert GEMM oracle.  x: (M, d) rows sorted by group; w:
+    (E, d, f); group_sizes: (E,) int32 with sum == M -> (M, f) fp32.
+
+    Each output row is dot(x_row, W[group(row)]) with a fixed contraction
+    order along d, independent of the other rows in its segment — the
+    per-row purity the drop-free MoE dispatch's batch invariance rests on.
+    """
+    return jax.lax.ragged_dot(x, w.astype(x.dtype),
+                              group_sizes.astype(jnp.int32),
+                              preferred_element_type=jnp.float32)
+
+
+def cov_accum_grouped_ref(x, xp, ids, experts: int):
+    """Routed-rows covariance triple oracle.  x, xp: (R, n) choice-major
+    rows (original / shifted stream, positionally paired per
+    (token, choice)); ids: (R,) int32 expert id per row from the ORIGINAL
+    stream -> (xx, xxp, xpxp) each (E, n, n) fp32.  All three terms bin by
+    the same ids so the cross term stays a true per-expert pairing."""
+    oh = jax.nn.one_hot(ids, experts, dtype=jnp.float32)      # (R, E)
+    xf = x.astype(jnp.float32)
+    xpf = xp.astype(jnp.float32)
+    upd = lambda a, b: jnp.einsum("re,rn,rm->enm", oh, a, b)
+    return upd(xf, xf), upd(xf, xpf), upd(xpf, xpf)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     """q: (B, H, Lq, D); k/v: (B, KV, Lk, D).  Dense softmax reference."""
     b, h, lq, d = q.shape

@@ -1,9 +1,22 @@
 """Feed-forward layers: SwiGLU / GELU MLP and mixture-of-experts.
 
-The MoE uses sort-free capacity dispatch built from one-hot cumsums (the
-GShard/Switch construction) but factored so the biggest intermediate is the
-(E, C, d) expert input buffer — never a (T, E, C) dispatch tensor.  Experts
-are stacked on a leading axis so expert parallelism is a single
+Two MoE dispatch formulations, selected by ``MoEConfig.dispatch``:
+
+* ``capacity`` (default) — sort-free capacity dispatch built from one-hot
+  cumsums (the GShard/Switch construction) but factored so the biggest
+  intermediate is the (E, C, d) expert input buffer — never a (T, E, C)
+  dispatch tensor.  Tokens past the per-expert capacity are dropped, so
+  outputs depend on the batch they were dispatched with.
+* ``dropfree`` — sort + segment-sum dispatch: the (T·k) routed choices are
+  sorted by expert id into contiguous ragged segments, fed through a
+  grouped expert GEMM (``kernels.ops.grouped_matmul``), unsorted, and
+  combined per token in fixed choice order.  No token is ever dropped and
+  every output row is a pure per-row function of (token, expert weights),
+  making the layer output exactly batch-size-invariant — the property
+  stage-1 calibration needs to fold microbatches by dp for expert-bank
+  units (see ``core/streaming.py``).
+
+Experts are stacked on a leading axis so expert parallelism is a single
 PartitionSpec('model', ...) on the weights; the scatter/gather token
 movement lowers to all-to-all-class collectives under GSPMD.
 """
@@ -75,20 +88,38 @@ def moe_init(key, cfg, dtype=jnp.float32):
     return p
 
 
-def moe_apply(p, x, cfg, *, capacity_factor: float = 1.25):
+def moe_apply(p, x, cfg, *, capacity_factor=None, dispatch=None):
     """x: (B, L, d) -> (B, L, d), plus aux load-balance loss (fp32 scalar).
 
-    Dispatch: flatten to T=B*L tokens, take top-k experts per token, assign
-    slot positions within each expert via a one-hot cumsum, scatter tokens
-    into an (E, C, d) buffer, run the 3 batched expert GEMMs, and
-    gather-combine weighted by the (renormalized) router gates.  Tokens over
-    capacity are dropped (contribute zero) — standard Switch semantics.
+    Dispatch (``cfg.moe.dispatch``; both keywords override per call):
+
+    * ``capacity`` — flatten to T=B*L tokens, take top-k experts per token,
+      assign slot positions within each expert via a one-hot cumsum, scatter
+      tokens into an (E, C, d) buffer, run the 3 batched expert GEMMs, and
+      gather-combine weighted by the (renormalized) router gates.  Tokens
+      over capacity C = ceil(T·k/E · capacity_factor) are dropped
+      (contribute zero) — standard Switch semantics.  C is floored at top_k
+      identically in the flat, EP, and decode-EP paths, so degenerate
+      decode shapes (t < k local tokens) keep at least one slot per choice.
+    * ``dropfree`` — sort the (T·k) routed choices by expert id
+      (``jax.lax.sort_key_val``), run the expert GEMMs over the resulting
+      contiguous ragged segments, unsort, and sum the k choices per token
+      in fixed choice order.  Nothing drops; outputs are exactly
+      batch-size-invariant (see module docstring).
 
     With an active production mesh this routes to the shard_map expert-
     parallel path (perf iteration B — GSPMD partitions the scatter/gather
     dispatch catastrophically: ~90 TB/device of all-reduce on the kimi-k2
     train cell).
     """
+    m = cfg.moe
+    if dispatch is None:
+        dispatch = m.dispatch
+    if dispatch not in ("capacity", "dropfree"):
+        raise ValueError(f"unknown moe dispatch {dispatch!r} "
+                         "(capacity | dropfree)")
+    if capacity_factor is None:
+        capacity_factor = m.capacity_factor
     from repro.distributed import sharding as SH
     mesh = SH.active_mesh()
     if mesh is not None:
@@ -98,19 +129,18 @@ def moe_apply(p, x, cfg, *, capacity_factor: float = 1.25):
         if n_model > 1 and cfg.moe.num_experts % n_model == 0 \
                 and x.shape[0] % dp_size == 0:
             if t_loc >= 256:
-                return _moe_apply_ep(p, x, cfg, mesh, capacity_factor)
+                return _moe_apply_ep(p, x, cfg, mesh, capacity_factor,
+                                     dispatch)
             if (cfg.d_model % dp_size == 0 and cfg.moe.d_ff % dp_size == 0
                     and "w" in p["experts"]["gate"]):
                 # decode: a handful of tokens cannot amortize moving expert
                 # weights — gather the TOKENS instead (decode-EP; dense
                 # banks only: the partial-GEMM slicing assumes (E, d, f))
-                return _moe_apply_ep_decode(p, x, cfg, mesh, capacity_factor)
-    m = cfg.moe
+                return _moe_apply_ep_decode(p, x, cfg, mesh, capacity_factor,
+                                            dispatch)
     b, l, d = x.shape
     t = b * l
     e, k = m.num_experts, m.top_k
-    cap = int(math.ceil(t * k / e * capacity_factor))
-    cap = max(cap, k)
 
     xt = x.reshape(t, d)
     logits = L.linear(p["router"], xt.astype(jnp.float32), dtype=jnp.float32)
@@ -126,41 +156,119 @@ def moe_apply(p, x, cfg, *, capacity_factor: float = 1.25):
         axis=0)
     aux = m.aux_loss_coef * e * jnp.sum(me * ce)
 
-    # --- slot assignment: flatten (T, k) choices in priority order -------
-    flat_ids = expert_ids.T.reshape(-1)                          # (k*T,) choice-major
-    onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)        # (kT, E)
-    pos = jnp.cumsum(onehot, axis=0) - 1                         # slot per choice
-    slot = jnp.sum(pos * onehot, axis=1)                         # (kT,)
-    keep = slot < cap
-    slot = jnp.clip(slot, 0, cap - 1)
-    dest = flat_ids * cap + slot                                 # (kT,) in [0, E*cap)
+    if dispatch == "dropfree":
+        y = _dispatch_dropfree(p["experts"], xt, gate_vals, expert_ids, cfg)
+        y = y.astype(x.dtype)
+    else:
+        cap = int(math.ceil(t * k / e * capacity_factor))
+        cap = max(cap, k)
 
-    token_idx = jnp.tile(jnp.arange(t), k)                       # choice-major order
-    gates_flat = gate_vals.T.reshape(-1) * keep.astype(jnp.float32)
+        # --- slot assignment: flatten (T, k) choices in priority order ---
+        flat_ids = expert_ids.T.reshape(-1)                      # (k*T,) choice-major
+        onehot = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)    # (kT, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1                     # slot per choice
+        slot = jnp.sum(pos * onehot, axis=1)                     # (kT,)
+        keep = slot < cap
+        slot = jnp.clip(slot, 0, cap - 1)
+        dest = flat_ids * cap + slot                             # (kT,) in [0, E*cap)
 
-    # --- scatter tokens into the expert buffer ---------------------------
-    buf = jnp.zeros((e * cap, d), x.dtype)
-    src = jnp.where(keep[:, None], xt[token_idx], 0).astype(x.dtype)
-    buf = buf.at[dest].add(src, mode="drop")
-    buf = buf.reshape(e, cap, d)
+        token_idx = jnp.tile(jnp.arange(t), k)                   # choice-major order
+        gates_flat = gate_vals.T.reshape(-1) * keep.astype(jnp.float32)
+        # [dropped, total] routed choices — the per-layer drop rate the
+        # compression report surfaces for capacity-vs-dropfree deltas
+        L.sow("experts_dropped", jnp.stack(
+            [jnp.sum(1.0 - keep.astype(jnp.float32)),
+             jnp.asarray(float(k * t), jnp.float32)]))
 
-    # --- expert GEMMs (batched over E; EP shards the leading axis) -------
-    w = p["experts"]
-    L.sow("experts_in", buf)
-    h = L.act(cfg.act_fn, bank_apply(w["gate"], buf)) * bank_apply(w["up"], buf)
-    L.sow("experts_down_in", h)
-    y_buf = bank_apply(w["down"], h).reshape(e * cap, d)
+        # --- scatter tokens into the expert buffer -----------------------
+        buf = jnp.zeros((e * cap, d), x.dtype)
+        src = jnp.where(keep[:, None], xt[token_idx], 0).astype(x.dtype)
+        buf = buf.at[dest].add(src, mode="drop")
+        buf = buf.reshape(e, cap, d)
 
-    # --- gather-combine ----------------------------------------------------
-    y = jnp.zeros((t, d), jnp.float32)
-    y = y.at[token_idx].add(
-        y_buf[dest].astype(jnp.float32) * gates_flat[:, None], mode="drop")
-    y = y.astype(x.dtype)
+        # --- expert GEMMs (batched over E; EP shards the leading axis) ---
+        w = p["experts"]
+        L.sow("experts_in", buf)
+        h = L.act(cfg.act_fn, bank_apply(w["gate"], buf)) \
+            * bank_apply(w["up"], buf)
+        L.sow("experts_down_in", h)
+        y_buf = bank_apply(w["down"], h).reshape(e * cap, d)
+
+        # --- gather-combine ----------------------------------------------
+        y = jnp.zeros((t, d), jnp.float32)
+        y = y.at[token_idx].add(
+            y_buf[dest].astype(jnp.float32) * gates_flat[:, None],
+            mode="drop")
+        y = y.astype(x.dtype)
 
     if "shared" in p:
         with L.scope("shared"):
             y = y + ffn_apply(p["shared"], xt, cfg.act_fn)
     return y.reshape(b, l, d), aux
+
+
+def _dispatch_dropfree(w, xt, gate_vals, expert_ids, cfg):
+    """Drop-free routed expert compute for one flat token matrix.
+
+    Lays the (T, k) routed choices out choice-major as (k·T, d) rows, sorts
+    rows by expert id into contiguous segments (stable ``sort_key_val``, so
+    ties keep choice-major order), runs the three expert GEMMs grouped over
+    the ragged segments, unsorts via the inverse permutation, and sums the k
+    gate-weighted choices per token in fixed choice order (fp32).
+
+    Every output row is dot(x_token, W_expert) with a fixed contraction
+    order along d — independent of which other rows share its segment — so
+    the result is exactly invariant to batch concatenation/splitting.
+
+    Taps are sown in the ORIGINAL choice-major order (not sorted) together
+    with the expert ids, so original- and shifted-stream rows pair
+    positionally per (token, choice) and the calibration engine can bin
+    per-expert covariances itself (``ops.cov_accum_grouped``).
+
+    Returns the combined (T, d) routed output in fp32 (shared experts and
+    dtype cast happen in the caller).
+    """
+    t, d = xt.shape
+    k = cfg.moe.top_k
+    e = cfg.moe.num_experts
+    kt = k * t
+
+    flat_ids = expert_ids.T.reshape(-1).astype(jnp.int32)        # (kT,) choice-major
+    token_idx = jnp.tile(jnp.arange(t), k)
+    rows = xt[token_idx]                                         # (kT, d)
+    L.sow("experts_in", rows)
+    L.sow("experts_ids", flat_ids)
+
+    iota = jnp.arange(kt, dtype=jnp.int32)
+    _, order = jax.lax.sort_key_val(flat_ids, iota)              # stable
+    inv = jnp.zeros((kt,), jnp.int32).at[order].set(iota)
+    group_sizes = jnp.bincount(flat_ids, length=e).astype(jnp.int32)
+
+    xs = jnp.take(rows, order, axis=0)                           # segment-contiguous
+    h = L.act(cfg.act_fn, grouped_bank_apply(w["gate"], xs, group_sizes)) \
+        * grouped_bank_apply(w["up"], xs, group_sizes)
+    # down-projection input tap in original order (dead code — DCE'd by
+    # XLA — unless the forward is being sown)
+    L.sow("experts_down_in", jnp.take(h, inv, axis=0))
+    y_rows = grouped_bank_apply(w["down"], h, group_sizes)
+    y_rows = jnp.take(y_rows, inv, axis=0)                       # choice-major again
+
+    gates_flat = gate_vals.T.reshape(-1)
+    y = jnp.sum((y_rows.astype(jnp.float32)
+                 * gates_flat[:, None]).reshape(k, t, d), axis=0)
+    return y
+
+
+def grouped_bank_apply(bp, xs, group_sizes):
+    """Grouped expert GEMM over segment-sorted rows.  xs: (R, d_in) with
+    the first group_sizes[0] rows belonging to expert 0 and so on; bank
+    dense (E, d_in, d_out) or factorized {"u": (E, k, d_out),
+    "v": (E, d_in, k)}."""
+    from repro.kernels import ops
+    if "w" in bp:
+        return ops.grouped_matmul(xs, bp["w"].astype(xs.dtype), group_sizes)
+    t = ops.grouped_matmul(xs, bp["v"].astype(xs.dtype), group_sizes)
+    return ops.grouped_matmul(t, bp["u"].astype(xs.dtype), group_sizes)
 
 
 def bank_apply(bp, x):
@@ -182,17 +290,56 @@ def _bank_spec(bp, mesh):
     return jax.tree.map(lambda a: P("model", *([None] * (a.ndim - 1))), bp)
 
 
-def _moe_apply_ep(p, x, cfg, mesh, capacity_factor: float):
+def _ep_dropfree_local(experts, xt, gate_vals, expert_ids, cfg, e_loc, e0,
+                       x_dtype):
+    """Local-expert drop-free compute shared by the EP bodies.
+
+    Choices targeting non-local experts keep their row POSITION (so the
+    choice-major layout — and with it batch invariance — is preserved) but
+    have the row zeroed and binned into a clamped local group; a zero row
+    through any expert GEMM is a zero row out, and the gate is also masked,
+    so non-local choices contribute exactly zero to the partial output that
+    the caller completes with one psum over 'model'.
+    """
+    t, d = xt.shape
+    k = cfg.moe.top_k
+    kt = k * t
+    flat_ids = expert_ids.T.reshape(-1).astype(jnp.int32)
+    token_idx = jnp.tile(jnp.arange(t), k)
+    local_id = flat_ids - e0
+    is_local = (local_id >= 0) & (local_id < e_loc)
+    gid = jnp.where(is_local, local_id, e_loc - 1).astype(jnp.int32)
+    rows = jnp.where(is_local[:, None], xt[token_idx], 0).astype(x_dtype)
+
+    iota = jnp.arange(kt, dtype=jnp.int32)
+    _, order = jax.lax.sort_key_val(gid, iota)
+    inv = jnp.zeros((kt,), jnp.int32).at[order].set(iota)
+    group_sizes = jnp.bincount(gid, length=e_loc).astype(jnp.int32)
+
+    xs = jnp.take(rows, order, axis=0)
+    h = L.act(cfg.act_fn, grouped_bank_apply(experts["gate"], xs, group_sizes)) \
+        * grouped_bank_apply(experts["up"], xs, group_sizes)
+    y_rows = grouped_bank_apply(experts["down"], h, group_sizes)
+    y_rows = jnp.take(y_rows, inv, axis=0)
+
+    gates_flat = gate_vals.T.reshape(-1) * is_local.astype(jnp.float32)
+    y = jnp.sum((y_rows.astype(jnp.float32)
+                 * gates_flat[:, None]).reshape(k, t, d), axis=0)
+    return y
+
+
+def _moe_apply_ep(p, x, cfg, mesh, capacity_factor: float, dispatch: str):
     """Explicit expert parallelism:
 
     * every (dp, model) device holds its dp-shard of tokens (replicated over
       'model') and E/n_model local experts;
     * each device routes its tokens, keeps only choices targeting its local
-      experts, scatters into a local (E_loc, C, d) buffer, runs the three
-      expert GEMMs, combines with gates — producing a PARTIAL (T_loc, d)
-      output that one psum over 'model' completes (the same wire cost as the
-      dense-TP FFN all-reduce, vs. GSPMD's scatter partitioning at ~90
-      TB/device on kimi-k2 train);
+      experts, runs the three expert GEMMs on them — capacity dispatch
+      scatters into a local (E_loc, C, d) buffer, drop-free dispatch sorts
+      the local choices into ragged segments — and combines with gates,
+      producing a PARTIAL (T_loc, d) output that one psum over 'model'
+      completes (the same wire cost as the dense-TP FFN all-reduce, vs.
+      GSPMD's scatter partitioning at ~90 TB/device on kimi-k2 train);
     * aux load-balance loss is pmean'd over dp and model (fully replicated).
     """
     from jax.sharding import PartitionSpec as P
@@ -226,6 +373,11 @@ def _moe_apply_ep(p, x, cfg, mesh, capacity_factor: float):
         aux = jax.lax.pmean(aux, "model")   # certify model-replication
 
         e0 = jax.lax.axis_index("model") * e_loc
+        if dispatch == "dropfree":
+            y = _ep_dropfree_local(experts, xt, gate_vals, expert_ids, cfg,
+                                   e_loc, e0, x_blk.dtype)
+            y = jax.lax.psum(y.astype(x_blk.dtype), "model")
+            return y.reshape(bl, l, d), aux
         flat_ids = expert_ids.T.reshape(-1)               # (k·T_loc,)
         local_id = flat_ids - e0
         is_local = (local_id >= 0) & (local_id < e_loc)
@@ -272,7 +424,8 @@ def _moe_apply_ep(p, x, cfg, mesh, capacity_factor: float):
     return y, aux
 
 
-def _moe_apply_ep_decode(p, x, cfg, mesh, capacity_factor: float):
+def _moe_apply_ep_decode(p, x, cfg, mesh, capacity_factor: float,
+                         dispatch: str):
     """Decode-time expert parallelism: move TOKENS, never weights.
 
     At decode, tokens are a few kB while the expert banks are TBs; the
@@ -322,6 +475,44 @@ def _moe_apply_ep_decode(p, x, cfg, mesh, capacity_factor: float):
         aux = jax.lax.pmean(aux, tuple(dp))  # identical on every dp shard
 
         e0 = jax.lax.axis_index("model") * e_loc
+        if dispatch == "dropfree":
+            from repro.kernels import ops
+            flat_ids = expert_ids.T.reshape(-1).astype(jnp.int32)
+            token_idx = jnp.tile(jnp.arange(t), k)
+            local_id = flat_ids - e0
+            is_local = (local_id >= 0) & (local_id < e_loc)
+            gid = jnp.where(is_local, local_id, e_loc - 1).astype(jnp.int32)
+            rows = jnp.where(is_local[:, None], xt[token_idx],
+                             0).astype(x_blk.dtype)
+            iota = jnp.arange(k * t, dtype=jnp.int32)
+            _, order = jax.lax.sort_key_val(gid, iota)
+            inv = jnp.zeros((k * t,), jnp.int32).at[order].set(iota)
+            group_sizes = jnp.bincount(gid, length=e_loc).astype(jnp.int32)
+            xs = jnp.take(rows, order, axis=0)
+            # d_in-sharded grouped partial GEMMs against the at-rest bank
+            # shards, fp32 partials completed by one psum over dp each
+            i = dp_index()
+            xs_d = jax.lax.dynamic_slice_in_dim(xs, i * d_loc, d_loc, axis=1)
+            hg = jax.lax.psum(ops.grouped_matmul(
+                xs_d, experts["gate"]["w"], group_sizes,
+                out_dtype=jnp.float32), dp)
+            hu = jax.lax.psum(ops.grouped_matmul(
+                xs_d, experts["up"]["w"], group_sizes,
+                out_dtype=jnp.float32), dp)
+            h = L.act(cfg.act_fn, hg) * hu                    # (kT, f) fp32
+            h_f = jax.lax.dynamic_slice_in_dim(h, i * f_loc, f_loc, axis=1)
+            y_rows = jax.lax.psum(ops.grouped_matmul(
+                h_f.astype(x_blk.dtype), experts["down"]["w"], group_sizes,
+                out_dtype=jnp.float32), dp)
+            y_rows = jnp.take(y_rows, inv, axis=0)
+            gates_flat = gate_vals.T.reshape(-1) \
+                * is_local.astype(jnp.float32)
+            y = jnp.sum((y_rows * gates_flat[:, None]).reshape(k, t, d),
+                        axis=0)
+            y = jax.lax.psum(y.astype(x_blk.dtype), "model")
+            y = jax.lax.dynamic_slice_in_dim(y, dp_index() * bl * l,
+                                             bl * l, 0)
+            return y.reshape(bl, l, d), aux
         flat_ids = expert_ids.T.reshape(-1)
         local_id = flat_ids - e0
         is_local = (local_id >= 0) & (local_id < e_loc)

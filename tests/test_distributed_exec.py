@@ -105,6 +105,46 @@ print("OK")
 """)
 
 
+def test_moe_expert_parallel_equivalence_dropfree():
+    """Drop-free dispatch under the EP mesh: every rank routes the
+    all-gathered tokens identically, computes its local experts' ragged
+    segments via the grouped GEMM, and one psum combines — must match the
+    single-device drop-free forward exactly (nothing drops, so no
+    capacity_factor headroom is needed)."""
+    run_child(COMMON + """
+from repro.models import mlp
+cfg = get_smoke_config("deepseek-v2-lite-16b").replace(dtype="float32")
+p = mlp.moe_init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 128, cfg.d_model)) * 0.5
+y_ref, aux_ref = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+def f(p, x):
+    with SH.use_mesh(mesh, cfg=cfg):
+        return mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+y, aux = jax.jit(f)(p, x)
+np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+assert abs(float(aux) - float(aux_ref)) < 1e-6
+print("OK")
+""")
+
+
+def test_moe_decode_ep_equivalence_dropfree():
+    run_child(COMMON + """
+from repro.models import mlp
+cfg = get_smoke_config("deepseek-v2-lite-16b").replace(dtype="float32")
+p = mlp.moe_init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.d_model)) * 0.5
+y_ref, aux_ref = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+def f(p, x):
+    with SH.use_mesh(mesh, cfg=cfg):
+        return mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+y, aux = jax.jit(f)(p, x)
+np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5)
+print("OK")
+""")
+
+
 def test_seqpar_flash_decode_equivalence():
     run_child(COMMON + """
 from repro.models import attention as A
@@ -259,6 +299,73 @@ for i, (a, b) in enumerate(zip(l1, l8)):
         err_msg=f"leaf {i}")
 print("OK")
 """)
+
+
+def test_sharded_calibration_dp_invariance_dropfree_banks():
+    """The headline unlock of drop-free routing: bank-bearing MoE units
+    FOLD their dp microbatches into one calibration forward.  Under
+    capacity dispatch this is illegal (routing depends on batch size), so
+    the engine pinned MoE units to per-microbatch forwards; the grouped
+    (T·k, d) layout is exactly batch-size-invariant, so folding is legal
+    and the folded run must reproduce the unsharded covariance triples and
+    compressed params.
+
+    Factor pairs are compared as composed v@u maps: at smoke scale
+    deepseek's per-expert covariances are barely full-rank (~256 routed
+    rows per expert against n=64), and the whitened solve's scale gauge
+    flips under that jitter while the composed map stays put (same
+    rationale as ``_COMPARE_REFINED``)."""
+    run_child(COMMON + """
+import dataclasses
+from repro.core import CompressConfig, compress_model
+from repro.data import calibration_set
+from repro.launch.mesh import make_calib_mesh
+from repro.models import model as M
+
+cfg = get_smoke_config("deepseek-v2-lite-16b").replace(dtype="float32")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+# 64-token sequences keep every expert's covariance well-conditioned
+# (~256 rows per expert vs n=64); shorter calib makes the comparison
+# measure stage-1 solve jitter instead of the folding under test
+calib = calibration_set(cfg, 16, 64)
+base = CompressConfig(ratio=0.6, refine=False, rank_multiple=1,
+                      microbatch=2, calib_mode="fused", debug_covs=True,
+                      moe_dispatch="dropfree")
+ref_p, rep1 = compress_model(params, cfg, calib, base)
+mesh = make_calib_mesh()
+assert dict(mesh.shape) == {"data": 8}, mesh
+dp_p, rep8 = compress_model(params, cfg, calib,
+                            dataclasses.replace(base, calib_mesh=mesh))
+
+assert rep8["calibration"]["calib_dp"] == 8
+assert rep8["calibration"]["moe_dispatch"] == "dropfree"
+# EVERY unit folded — including the bank-bearing MoE unit
+assert (rep8["calibration"]["tapped_forwards"] * 8
+        == rep1["calibration"]["tapped_forwards"]), (
+    rep1["calibration"], rep8["calibration"])
+moe1 = [u for u in rep1["units"] if u["kind"].endswith("_moe")]
+moe8 = [u for u in rep8["units"] if u["kind"].endswith("_moe")]
+assert moe1 and moe8
+for u1, u8 in zip(moe1, moe8):
+    assert u8["tapped_forwards"] * 8 == u1["tapped_forwards"], (u1, u8)
+    assert u8["moe_drop_rate"] == 0.0
+
+# covariance triples — per-expert (E, n, n) banks included — match
+checked_banks = 0
+for u1, u8 in zip(rep1["units"], rep8["units"]):
+    for tap, c1 in u1.get("covs", {}).items():
+        c8 = u8["covs"][tap]
+        for key in ("xx", "xxp", "xpxp", "count"):
+            a, b = np.asarray(c1[key]), np.asarray(c8[key])
+            np.testing.assert_allclose(
+                b, a, rtol=2e-4, atol=2e-4 * max(np.abs(a).max(), 1.0),
+                err_msg=f"{u1['name']}/{tap}/{key}")
+            if a.ndim == 3:
+                checked_banks += 1
+assert checked_banks > 0
+
+# compressed params match as composed maps
+""" + _COMPARE_REFINED)
 
 
 def test_sharded_refinement_dp_invariance():

@@ -1,0 +1,423 @@
+"""Drop-free MoE routing: batch-size invariance, grouped kernels, and the
+per-expert adaptive rank path it unlocks.
+
+The capacity dispatch's (E, C, d) buffers make the MoE forward a function
+of the WHOLE batch (capacity and overflow drops depend on T), which is why
+bank-bearing units could never fold dp microbatches into one calibration
+forward.  The drop-free dispatch (sort + segment-sum + grouped GEMM over
+the ragged (T·k, d) row layout) processes every routed choice with a
+per-row contraction, so splitting a batch and concatenating the outputs is
+exact — the property everything downstream (DP-folded bank calibration,
+per-expert ranks) rests on, and the property this file pins down.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import calibration as C
+from repro.core import pipeline as P
+from repro.core import ranks as RK
+from repro.core import streaming as S
+from repro.kernels import ops, ref
+from repro.models import layers as L
+from repro.models import mlp
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def cfg_moe(**moe_over):
+    cfg = get_smoke_config("deepseek-v2-lite-16b").replace(dtype="float32")
+    if moe_over:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, **moe_over))
+    return cfg
+
+
+def dense_oracle(p, x, cfg):
+    """Vectorized exact top-k mixture: every expert on every token, then
+    gate-masked — no capacity, no routing layout at all."""
+    m = cfg.moe
+    d = x.shape[-1]
+    xt = x.reshape(-1, d).astype(jnp.float32)
+    probs = jax.nn.softmax(xt @ p["router"]["w"], axis=-1)
+    gv, ids = jax.lax.top_k(probs, m.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+
+    def bank_w(bp):  # dense or factorized (v, u) stacked bank
+        return bp["w"] if "w" in bp else jnp.einsum("enk,ekm->enm",
+                                                    bp["v"], bp["u"])
+
+    w = p["experts"]
+    h = L.act(cfg.act_fn, jnp.einsum("td,edf->etf", xt, bank_w(w["gate"]))) \
+        * jnp.einsum("td,edf->etf", xt, bank_w(w["up"]))
+    ye = jnp.einsum("etf,efd->etd", h, bank_w(w["down"]))
+    gates_e = (jax.nn.one_hot(ids, m.num_experts) * gv[..., None]).sum(1)
+    y = jnp.einsum("te,etd->td", gates_e, ye)
+    if "shared" in p:
+        y = y + mlp.ffn_apply(p["shared"], xt, cfg.act_fn)
+    return y.reshape(x.shape)
+
+
+class TestDropFreeDispatch:
+    def test_matches_dense_oracle(self):
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
+        y, aux = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(dense_oracle(p, x, cfg)),
+                                   rtol=2e-3, atol=2e-3)
+        assert float(aux) > 0
+
+    def test_matches_capacity_at_large_factor(self):
+        """With enough headroom nothing drops, so the two dispatches
+        compute the same mixture — the layouts differ, the math must not."""
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+        y_cap, _ = mlp.moe_apply(p, x, cfg, capacity_factor=64.0)
+        y_df, _ = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+        np.testing.assert_allclose(np.asarray(y_df), np.asarray(y_cap),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("experts,top_k,seqs,toks",
+                             [(8, 2, 2, 16), (8, 1, 3, 7), (4, 3, 2, 9),
+                              (8, 2, 5, 11)])
+    def test_batch_size_invariance(self, experts, top_k, seqs, toks):
+        """THE drop-free property: running microbatches separately and
+        concatenating equals one joint forward, to fp32 tolerance, for any
+        split point — including ragged token counts and every top_k/expert
+        combination the assigned archs use."""
+        cfg = cfg_moe(num_experts=experts, top_k=top_k)
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(7),
+                              (seqs, toks, cfg.d_model)) * 0.5
+        y_all, _ = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+        for cut in range(1, seqs):
+            y_a, _ = mlp.moe_apply(p, x[:cut], cfg, dispatch="dropfree")
+            y_b, _ = mlp.moe_apply(p, x[cut:], cfg, dispatch="dropfree")
+            np.testing.assert_allclose(
+                np.asarray(jnp.concatenate([y_a, y_b], 0)),
+                np.asarray(y_all), rtol=1e-6, atol=1e-6)
+
+    def test_capacity_is_not_batch_size_invariant_under_pressure(self):
+        """The counterexample motivating the whole PR: at a tight capacity
+        factor the joint batch drops different tokens than the split
+        halves, so capacity dispatch cannot fold microbatches."""
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3),
+                              (4, 16, cfg.d_model)) * 0.5
+        y_all, _ = mlp.moe_apply(p, x, cfg, capacity_factor=1.0)
+        y_a, _ = mlp.moe_apply(p, x[:2], cfg, capacity_factor=1.0)
+        y_b, _ = mlp.moe_apply(p, x[2:], cfg, capacity_factor=1.0)
+        y_cat = jnp.concatenate([y_a, y_b], 0)
+        assert float(jnp.abs(y_cat - y_all).max()) > 1e-4
+
+    @pytest.mark.parametrize("dispatch", ["capacity", "dropfree"])
+    def test_single_token_below_top_k(self, dispatch):
+        """t < k degenerate decode shape: one token with top_k=2 must
+        route identically in both dispatches (capacity C is floored at
+        top_k; the grouped layout needs no floor at all)."""
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(KEY, (1, 1, cfg.d_model)) * 0.5
+        y, _ = mlp.moe_apply(p, x, cfg, dispatch=dispatch,
+                             capacity_factor=64.0)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(dense_oracle(p, x, cfg)),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_factorized_banks_apply_dropfree(self):
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        for name in ("gate", "up", "down"):
+            w = p["experts"][name]["w"]
+            u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+            p["experts"][name] = {"v": u * s[:, None, :], "u": vt}
+        x = jax.random.normal(KEY, (1, 8, cfg.d_model)) * 0.5
+        y, _ = mlp.moe_apply(p, x, cfg, dispatch="dropfree")
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(dense_oracle(p, x, cfg)),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_config_capacity_factor_threaded(self):
+        """MoEConfig.capacity_factor is the default the flat path uses
+        when no keyword is passed — not a hard-coded constant."""
+        cfg = cfg_moe(capacity_factor=64.0)
+        p = mlp.moe_init(KEY, cfg)
+        x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+        y_cfg, _ = mlp.moe_apply(p, x, cfg)
+        y_kw, _ = mlp.moe_apply(p, x, cfg_moe(), capacity_factor=64.0)
+        np.testing.assert_array_equal(np.asarray(y_cfg), np.asarray(y_kw))
+
+    def test_unknown_dispatch_raises(self):
+        cfg = cfg_moe()
+        p = mlp.moe_init(KEY, cfg)
+        x = jnp.zeros((1, 2, cfg.d_model))
+        with pytest.raises(ValueError, match="dispatch"):
+            mlp.moe_apply(p, x, cfg, dispatch="nope")
+
+
+class TestGroupedKernels:
+    @pytest.mark.parametrize("m,d,f,sizes", [
+        (16, 128, 256, [4, 0, 7, 5]),
+        (24, 100, 96, [24, 0, 0]),          # unaligned d/f, empty groups
+        (37, 80, 64, [10, 9, 0, 18]),        # ragged rows
+        (8, 128, 128, [8]),                  # single group
+    ])
+    def test_grouped_matmul_ref_path(self, m, d, f, sizes):
+        x = jax.random.normal(KEY, (m, d), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (len(sizes), d, f), jnp.float32)
+        gs = jnp.asarray(sizes, jnp.int32)
+        got = np.asarray(ops.grouped_matmul(x, w, gs))
+        want = np.asarray(ref.grouped_matmul_ref(x, w, gs))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+        # row-by-row oracle: output row i is x[i] @ w[group(i)]
+        gids = np.repeat(np.arange(len(sizes)), sizes)
+        for i in range(m):
+            np.testing.assert_allclose(
+                got[i], np.asarray(x[i] @ w[gids[i]]), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("m,d,f,sizes,bm,bf", [
+        (16, 128, 256, [4, 0, 7, 5], 8, 128),
+        (24, 128, 128, [24, 0, 0], 8, 128),
+        (37, 80, 96, [10, 9, 0, 18], 16, 128),  # pad rows AND lanes
+        (32, 256, 256, [0, 0, 32], 16, 256),     # leading empties
+    ])
+    def test_grouped_matmul_pallas_interpret(self, m, d, f, sizes, bm, bf):
+        x = jax.random.normal(KEY, (m, d), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1),
+                              (len(sizes), d, f), jnp.float32)
+        gs = jnp.asarray(sizes, jnp.int32)
+        got = np.asarray(ops.grouped_matmul(x, w, gs, force_pallas=True,
+                                            interpret=True))
+        want = np.asarray(ref.grouped_matmul_ref(x, w, gs))
+        # fp32 accumulation order differs between the tiled kernel and the
+        # ragged_dot reference
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_cov_accum_grouped_matches_ref(self):
+        rows, n, e = 300, 72, 6
+        x = jax.random.normal(KEY, (rows, n), jnp.float32)
+        xp = x + 0.1 * jax.random.normal(jax.random.PRNGKey(1), (rows, n))
+        ids = jax.random.randint(jax.random.PRNGKey(2), (rows,), 0, e)
+        got = ops.cov_accum_grouped(x, xp, ids, e)
+        want = ref.cov_accum_grouped_ref(x, xp, ids, e)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-4, atol=1e-4)
+        # accumulate-into
+        acc = tuple(jnp.ones((e, n, n), jnp.float32) for _ in range(3))
+        got2 = ops.cov_accum_grouped(x, xp, ids, e, acc=acc)
+        for g2, w in zip(got2, want):
+            np.testing.assert_allclose(np.asarray(g2), np.asarray(w) + 1.0,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_cov_accum_grouped_empty_expert_bins(self):
+        rows, n, e = 40, 16, 8
+        x = jax.random.normal(KEY, (rows, n), jnp.float32)
+        ids = jnp.zeros((rows,), jnp.int32)  # everything in bin 0
+        xx, _, _ = ops.cov_accum_grouped(x, x, ids, e)
+        np.testing.assert_allclose(np.asarray(xx[0]),
+                                   np.asarray(x.T @ x), rtol=1e-4,
+                                   atol=1e-4)
+        assert float(jnp.abs(xx[1:]).max()) == 0.0
+
+    def test_update_covs_grouped_dispatch(self):
+        """calibration.update_covs routes (R, n) rows + ids into the
+        grouped accumulator; count tracks rows."""
+        rows, n, e = 64, 16, 4
+        x = jax.random.normal(KEY, (rows, n), jnp.float32)
+        ids = jax.random.randint(KEY, (rows,), 0, e)
+        covs = C.init_covs(n, experts=e)
+        covs = C.update_covs(covs, x, x, ids=ids)
+        want = ref.cov_accum_grouped_ref(x, x, ids, e)
+        np.testing.assert_allclose(np.asarray(covs["xx"]),
+                                   np.asarray(want[0]), rtol=1e-4,
+                                   atol=1e-4)
+        assert float(covs["count"]) == rows
+        assert C.ids_tap_name("ffn/experts_in") == "ffn/experts_ids"
+        assert C.ids_tap_name("ffn/experts_down_in") == "ffn/experts_ids"
+
+
+class TestDropFreeCalibration:
+    def _compress(self, seqs=8, toks=16, **over):
+        cfg = cfg_moe()
+        params = M.init_params(cfg, KEY)
+        calib = {"tokens": jax.random.randint(KEY, (seqs, toks), 0,
+                                              cfg.vocab_size)}
+        base = dict(ratio=0.5, refine=False, calib_mode="fused",
+                    microbatch=2)
+        base.update(over)
+        return P.compress_model(params, cfg, calib,
+                                P.CompressConfig(**base))
+
+    def test_engine_grouped_taps_accumulate_per_expert(self):
+        """Under drop-free dispatch the bank taps sow 2D rows; the engine
+        still sizes (E, n, n) accumulators via num_experts and fills them
+        through the grouped path."""
+        _, rep = self._compress(moe_dispatch="dropfree", debug_covs=True)
+        moe = [u for u in rep["units"] if u["kind"].endswith("_moe")]
+        assert moe, "smoke config lost its MoE layer"
+        covs = moe[0]["covs"]["ffn/experts_in"]
+        e = cfg_moe().moe.num_experts
+        assert np.asarray(covs["xx"]).shape == (e, 64, 64)
+        assert float(np.abs(np.asarray(covs["xx"])).sum()) > 0
+        assert rep["calibration"]["moe_dispatch"] == "dropfree"
+        assert rep["calibration"]["moe_drop_rate"][moe[0]["name"]] == 0.0
+
+    def test_capacity_drop_rate_reported(self):
+        """Capacity mode measures the drop rate at the calibration batch
+        size; a tight factor must drop a visible fraction."""
+        _, rep = self._compress(moe_capacity_factor=1.0)
+        rates = rep["calibration"]["moe_drop_rate"]
+        assert rates, "no MoE drop rates reported"
+        for rate in rates.values():
+            assert 0.0 <= rate <= 1.0
+        assert rep["calibration"]["moe_dispatch"] == "capacity"
+        _, rep_loose = self._compress(moe_capacity_factor=64.0)
+        for rate in rep_loose["calibration"]["moe_drop_rate"].values():
+            assert rate == 0.0
+
+    def test_unknown_moe_dispatch_raises(self):
+        with pytest.raises(ValueError, match="moe_dispatch"):
+            self._compress(moe_dispatch="bogus")
+
+    def test_compressed_model_keeps_dispatch(self):
+        """The dropfree-compressed factorized banks run through the
+        grouped GEMM and still match the capacity forward of the SAME
+        compressed params (nothing drops at headroom)."""
+        cfg = cfg_moe()
+        new_p, _ = self._compress(moe_dispatch="dropfree")
+        cfg_df = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, dispatch="dropfree"))
+        x = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        y_df, _ = M.forward_hidden(new_p, cfg_df, {"tokens": x},
+                                   train=False)
+        y_cap, _ = M.forward_hidden(
+            new_p, cfg.replace(moe=dataclasses.replace(
+                cfg.moe, capacity_factor=64.0)), {"tokens": x}, train=False)
+        np.testing.assert_allclose(np.asarray(y_df), np.asarray(y_cap),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestPerExpertRanks:
+    def test_adaptive_dropfree_allocates_per_expert(self):
+        cfg = cfg_moe()
+        params = M.init_params(cfg, KEY)
+        calib = {"tokens": jax.random.randint(KEY, (8, 16), 0,
+                                              cfg.vocab_size)}
+        ccfg = P.CompressConfig(ratio=0.5, refine=False, calib_mode="fused",
+                                microbatch=2, rank_mode="adaptive",
+                                rank_multiple=1, moe_dispatch="dropfree")
+        new_p, rep = P.compress_model(params, cfg, calib, ccfg)
+        e = cfg.moe.num_experts
+        bank_entries = [lin for u in rep["units"]
+                        for lin in u.get("linears", [])
+                        if "rank_per_expert" in lin]
+        assert bank_entries, "no per-expert rank entries under dropfree"
+        for lin in bank_entries:
+            ks = lin["rank_per_expert"]
+            assert len(ks) == e
+            assert lin["rank"] == max(ks)
+            assert all(k >= 1 for k in ks)
+            assert lin["padded_ratio"] >= lin["ratio"]
+        alloc = rep["calibration"]["rank_mode"]
+        assert alloc["mode"] == "adaptive"
+        # the water-filler's budget invariant holds with per-expert items
+        assert alloc["allocated_params"] <= alloc["budget_params"]
+        assert alloc["padded_params"] >= alloc["allocated_params"]
+        # the factorized banks actually carry the zero-masked tails: for
+        # each stacked u factor, some expert keeps all kmax components
+        # (max(ks) defines the buffer) and the per-expert nonzero counts
+        # are exactly the allocated ranks' shape
+        flat = jax.tree_util.tree_flatten_with_path(new_p)[0]
+        checked = 0
+        for path, leaf in flat:
+            label = jax.tree_util.keystr(path)
+            if "experts" in label and "'u'" in label and leaf.ndim == 3:
+                tail_zero = np.asarray(jnp.abs(leaf).sum(axis=-1))  # (E, k)
+                per_expert_ranks = (tail_zero > 0).sum(axis=-1)
+                assert int(per_expert_ranks.max()) == leaf.shape[1]
+                checked += 1
+        assert checked >= 3
+
+    def test_adaptive_capacity_keeps_pooled_bank_rank(self):
+        """Capacity mode keeps the seed's pooled copies=E item — one rank
+        per bank, no per-expert entries (bit-for-bit allocator parity)."""
+        cfg = cfg_moe()
+        params = M.init_params(cfg, KEY)
+        calib = {"tokens": jax.random.randint(KEY, (8, 16), 0,
+                                              cfg.vocab_size)}
+        ccfg = P.CompressConfig(ratio=0.5, refine=False, calib_mode="fused",
+                                microbatch=2, rank_mode="adaptive",
+                                rank_multiple=1)
+        _, rep = P.compress_model(params, cfg, calib, ccfg)
+        assert not any("rank_per_expert" in lin for u in rep["units"]
+                       for lin in u.get("linears", []))
+
+    def test_mask_expert_tails_nested_truncation(self):
+        """Masking the kmax solve at k_e equals solving at k_e directly —
+        the SVD factors are σ-descending so truncations nest."""
+        from repro.core import lowrank as LR
+        n, m = 24, 16
+        w = jax.random.normal(KEY, (3, n, m), jnp.float32)
+        ks = (4, 8, 2)
+        sol = jax.vmap(lambda wi: LR.solve_agnostic(wi, k=max(ks)))(w)
+        masked = P._mask_expert_tails(sol, ks)
+        for i, k in enumerate(ks):
+            direct = LR.solve_agnostic(w[i], k=k)
+            np.testing.assert_allclose(
+                np.asarray(masked["v"][i] @ masked["u"][i]),
+                np.asarray(direct["v"] @ direct["u"]),
+                rtol=1e-4, atol=1e-4)
+
+    def test_bank_padded_cost(self):
+        logical, padded = RK.bank_padded_cost(10, 6, [2, 4, 3])
+        assert logical == 16 * (2 + 4 + 3)
+        assert padded == 16 * 3 * 4
+        assert padded >= logical
+
+
+class TestStreamingFoldGuard:
+    def test_capacity_bank_blocks_fold_dropfree_does_not(self):
+        """The never-fold guard now keys on CAPACITY banks only."""
+        cfg = cfg_moe()
+        params = M.init_params(cfg, KEY)
+        unit = [u for u in P.unroll_units(params, cfg)
+                if u.kind.endswith("_moe")][0]
+        groups = P.tap_groups(P.linear_specs(unit.kind, cfg))
+        fwd_taps = P.make_unit_apply(unit.kind, cfg, 8, want_taps=True)
+        x0 = jnp.zeros((2, 8, cfg.d_model), jnp.float32)
+
+        eng_cap = S.CalibrationEngine.for_unit(
+            groups, fwd_taps, unit.params, x0, None, num_experts=8)
+        assert eng_cap._has_capacity_bank
+
+        cfg_df = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                     dispatch="dropfree"))
+        fwd_df = P.make_unit_apply(unit.kind, cfg_df, 8, want_taps=True)
+        eng_df = S.CalibrationEngine.for_unit(
+            groups, fwd_df, unit.params, x0, None, num_experts=8)
+        assert not eng_df._has_capacity_bank
+
+    def test_grouped_bank_requires_num_experts(self):
+        cfg = cfg_moe()
+        cfg_df = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                     dispatch="dropfree"))
+        params = M.init_params(cfg, KEY)
+        unit = [u for u in P.unroll_units(params, cfg)
+                if u.kind.endswith("_moe")][0]
+        groups = P.tap_groups(P.linear_specs(unit.kind, cfg))
+        fwd_df = P.make_unit_apply(unit.kind, cfg_df, 8, want_taps=True)
+        x0 = jnp.zeros((2, 8, cfg.d_model), jnp.float32)
+        with pytest.raises(ValueError, match="num_experts"):
+            S.CalibrationEngine.for_unit(groups, fwd_df, unit.params, x0,
+                                         None)
