@@ -16,6 +16,13 @@ Top level (all required):
     claims          [{name: str, pass: bool, detail: str}, ...] with at
                     least one ISSUE-numbered claim (name ``claim_I<n>*`` —
                     e.g. claim_I6 autotune, claim_I7 serving)
+
+Arch-zoo conformance rows (``zoo_<arch>_roundtrip``, ISSUE 10) carry a
+stricter meta contract: ``arch`` (str), ``bit_parity`` /
+``resliced_parity`` / ``token_match`` (bool), ``ppl_ratio`` /
+``tokens_per_s`` (number).  A claim carrying an ``archs`` list must
+reference only archs present among the artifact's zoo rows — a claim
+over archs the matrix never measured is rejected.
 """
 
 from __future__ import annotations
@@ -25,6 +32,24 @@ import sys
 from typing import List
 
 SCHEMA_VERSION = 1
+
+# per-arch conformance matrix rows: required meta keys and their types
+ZOO_ROW_META = {"arch": str, "bit_parity": bool, "resliced_parity": bool,
+                "token_match": bool, "ppl_ratio": (int, float),
+                "tokens_per_s": (int, float)}
+
+
+def _check_zoo_row(i: int, r: dict, bad: List[str]) -> None:
+    meta = r.get("meta")
+    if not isinstance(meta, dict):
+        return  # already reported by the generic row check
+    for key, typ in ZOO_ROW_META.items():
+        val = meta.get(key)
+        if typ is not bool and isinstance(val, bool):
+            bad.append(f"rows[{i}].meta.{key}: bool where "
+                       f"{typ} expected")
+        elif not isinstance(val, typ):
+            bad.append(f"rows[{i}].meta.{key}: missing or not {typ}")
 
 
 def validate(doc) -> List[str]:
@@ -54,6 +79,10 @@ def validate(doc) -> List[str]:
                 bad.append(f"rows[{i}].us: not a non-negative number")
             if not isinstance(r.get("meta"), dict):
                 bad.append(f"rows[{i}].meta: not an object")
+            name = r.get("name")
+            if isinstance(name, str) and name.startswith("zoo_") \
+                    and name.endswith("_roundtrip"):
+                _check_zoo_row(i, r, bad)
     claims = doc.get("claims")
     if not isinstance(claims, list) or not claims:
         bad.append("claims: missing or empty")
@@ -72,6 +101,23 @@ def validate(doc) -> List[str]:
                    and str(c.get("name", "")).startswith("claim_I")
                    for c in claims):
             bad.append("claims: no claim_I* entry")
+        # claims scoped to archs must reference measured matrix rows only
+        measured = {r["meta"].get("arch") for r in (rows or [])
+                    if isinstance(r, dict) and isinstance(r.get("meta"),
+                                                          dict)}
+        for i, c in enumerate(claims):
+            if not isinstance(c, dict) or "archs" not in c:
+                continue
+            archs = c["archs"]
+            if not isinstance(archs, list) or not archs or not all(
+                    isinstance(a, str) and a for a in archs):
+                bad.append(f"claims[{i}].archs: not a non-empty list of "
+                           "arch names")
+                continue
+            unmeasured = [a for a in archs if a not in measured]
+            if unmeasured:
+                bad.append(f"claims[{i}].archs: not backed by matrix "
+                           f"rows: {unmeasured}")
     return bad
 
 

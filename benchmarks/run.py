@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   serving_throughput   — continuous-batching engine under a Poisson trace
                          (ISSUE 7): tokens/sec + p50/p99, compressed-vs-
                          dense decode at equal batch, flash-decode kernel
+  zoo_matrix           — arch-zoo conformance matrix (ISSUE 10): per-arch
+                         compress -> checkpoint -> serve roundtrip rows +
+                         claim_I10_zoo_roundtrip (``--zoo`` only; not in
+                         the default sweep — it re-compresses every arch)
 
 ``--wallclock`` runs ONLY the wall-clock benchmark (with a shorter train
 substrate); ``--serving`` runs ONLY the serving benchmark.  Both emit the
@@ -26,6 +30,7 @@ jobs' entry points:
 
     python benchmarks/run.py --wallclock --out-dir artifacts/
     python benchmarks/run.py --serving --out-dir artifacts/
+    python benchmarks/run.py --zoo --out-dir artifacts/
 """
 
 from __future__ import annotations
@@ -47,6 +52,11 @@ def main(argv=None) -> None:
     ap.add_argument("--serving", action="store_true",
                     help="run only the serving-throughput benchmark "
                          "+ artifact")
+    ap.add_argument("--zoo", action="store_true",
+                    help="run only the arch-zoo conformance matrix "
+                         "+ artifact")
+    ap.add_argument("--archs", nargs="*", default=None,
+                    help="with --zoo: restrict the matrix to these archs")
     ap.add_argument("--out-dir", default=None,
                     help="BENCH_<n>.json directory (default: repo root)")
     ap.add_argument("--steps", type=int, default=None,
@@ -72,6 +82,16 @@ def main(argv=None) -> None:
         for row in wallclock.summary_rows(doc):
             print(row)
         print(f"serving_artifact,0.0,{path}")
+        print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},"
+              "end-to-end")
+        return
+    if args.zoo:
+        from benchmarks import wallclock, zoo_matrix
+        doc = zoo_matrix.collect(args.archs)
+        path = wallclock.emit(doc, args.out_dir)
+        for row in wallclock.summary_rows(doc):
+            print(row)
+        print(f"zoo_artifact,0.0,{path}")
         print(f"total_benchmark_wall,{(time.time() - t0) * 1e6:.0f},"
               "end-to-end")
         return

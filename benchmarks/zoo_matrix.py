@@ -1,0 +1,160 @@
+"""Arch-zoo conformance matrix benchmark (ISSUE 10).
+
+Runs ``repro.core.zoo.roundtrip`` — smoke compress → checkpoint (padded +
+re-sliced banks) → ``Server`` reload → decode — for every registered arch
+and emits one schema-locked matrix row per arch into the BENCH_<n>.json
+trajectory, plus ``claim_I10_zoo_roundtrip`` asserting bitwise param
+parity, token-for-token decode parity, and per-arch envelope conformance
+across the whole zoo.
+
+    python benchmarks/run.py --zoo --out-dir artifacts/   # CI entry point
+    python -m benchmarks.zoo_matrix --rebaseline          # refresh envelopes
+
+``--rebaseline`` measures the matrix on THIS machine and rewrites
+``tests/conformance/envelopes.json`` with slack around the measured
+values (quality: +20% ppl-ratio headroom; throughput: floor at 1/5 of
+measured — CI runners share cores).  Commit the diff deliberately; it is
+the conformance contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.bench_schema import SCHEMA_VERSION, validate
+
+ENVELOPES_PATH = os.path.join(os.path.dirname(__file__), "..", "tests",
+                              "conformance", "envelopes.json")
+
+# matrix-row meta keys every zoo row must carry (bench_schema enforces)
+ROW_META_KEYS = ("arch", "family", "frontend", "bit_parity",
+                 "resliced_parity", "token_match", "ppl_ratio",
+                 "tokens_per_s")
+
+PPL_RATIO_SLACK = 1.20     # envelope headroom over the measured ratio
+THROUGHPUT_FLOOR_DIV = 5.0  # envelope floor = measured tokens/s ÷ this
+
+
+def measure(archs: Optional[List[str]] = None) -> List[dict]:
+    """One conformance record per arch (see ``zoo.roundtrip``)."""
+    from repro.configs import ALL_ARCHS
+    from repro.core import zoo
+
+    records = []
+    for arch in archs or ALL_ARCHS:
+        with tempfile.TemporaryDirectory() as workdir:
+            record, _ = zoo.roundtrip(arch, workdir)
+        records.append(record)
+    return records
+
+
+def collect(archs: Optional[List[str]] = None, *,
+            records: Optional[List[dict]] = None) -> dict:
+    """Measure the matrix and return a schema-valid artifact doc.
+
+    Pass pre-measured ``records`` (from :func:`measure`) to build the doc
+    without re-compressing the zoo — the re-baseline flow measures once
+    and feeds both the envelope file and the artifact."""
+    import jax
+
+    from repro.core import zoo
+
+    t0 = time.time()
+    if records is None:
+        records = measure(archs)
+    try:
+        envelopes = zoo.load_envelopes(ENVELOPES_PATH)
+    except OSError:
+        envelopes = {}
+
+    rows = []
+    failures: List[str] = []
+    for rec in records:
+        meta = {k: rec[k] for k in ROW_META_KEYS}
+        meta.update(units=rec["units"], bank_leaves=rec["bank_leaves"],
+                    ppl_dense=rec["ppl_dense"],
+                    ppl_compressed=rec["ppl_compressed"],
+                    compress_wall_s=rec["compress_wall_s"])
+        rows.append({"name": f"zoo_{rec['arch']}_roundtrip",
+                     "us": rec["total_wall_s"] * 1e6, "meta": meta})
+        bad = zoo.check_envelope(rec, envelopes.get(rec["arch"]))
+        failures.extend(f"{rec['arch']}: {b}" for b in bad)
+
+    ok = not failures
+    detail = (f"{len(records)} archs: compress->checkpoint->serve "
+              "roundtrip bit- and token-exact, envelopes held"
+              if ok else "; ".join(failures[:6]))
+    doc = {
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "mode": ("interpret" if jax.default_backend() != "tpu"
+                 else "mosaic"),
+        "rows": rows,
+        "claims": [{
+            "name": "claim_I10_zoo_roundtrip",
+            "pass": ok,
+            "detail": detail,
+            "archs": [r["arch"] for r in records],
+        }],
+    }
+    doc["rows"].append({"name": "zoo_matrix_total", "us":
+                        (time.time() - t0) * 1e6,
+                        "meta": {"archs": len(records)}})
+    problems = validate(doc)
+    assert not problems, problems
+    return doc
+
+
+def rebaseline(records: List[dict],
+               path: str = ENVELOPES_PATH) -> Dict[str, dict]:
+    """Rewrite the envelope file with slack around measured values."""
+    envs = {
+        rec["arch"]: {
+            "max_ppl_ratio": round(rec["ppl_ratio"] * PPL_RATIO_SLACK, 3),
+            "min_tokens_per_s": round(
+                rec["tokens_per_s"] / THROUGHPUT_FLOOR_DIV, 1),
+        }
+        for rec in sorted(records, key=lambda r: r["arch"])
+    }
+    with open(path, "w") as f:
+        json.dump(envs, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return envs
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="measure and rewrite tests/conformance/"
+                         "envelopes.json")
+    ap.add_argument("--archs", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    if args.rebaseline:
+        records = measure(args.archs)
+        envs = rebaseline(records)
+        for arch, env in envs.items():
+            print(f"{arch}: {env}")
+        return 0
+    from benchmarks import wallclock
+
+    doc = collect(args.archs)
+    path = wallclock.emit(doc)
+    for row in wallclock.summary_rows(doc):
+        print(row)
+    print(f"zoo_artifact,0.0,{path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.exit(main())

@@ -18,6 +18,17 @@ Design for 1000+ nodes (DESIGN.md §4):
   rather than unbounded memory growth).
 * **Retention** — keep the last ``keep`` checkpoints, never deleting the one
   a restore just came from.
+* **Dtype fidelity** — ``np.save``/``np.load`` silently degrade extension
+  dtypes (ml_dtypes bfloat16 round-trips as raw void ``|V2``).  Non-builtin
+  float leaves are stored as a uint view of the same width and viewed back
+  on load using the logical dtype recorded in the manifest, so compressed
+  bf16 factor pairs restore bit-identical.
+* **Factorized banks** — per-expert MoE factor banks are padded to a common
+  ``kmax`` with zero-masked rank tails.  The manifest records the logical
+  ``rank_per_expert`` for every bank leaf, and ``reslice_banks=True``
+  exports each expert's factors sliced to its logical rank (one file per
+  expert); restore re-pads with zeros, which is lossless because the
+  masked tails are exactly zero by construction.
 """
 
 from __future__ import annotations
@@ -34,6 +45,8 @@ import jax
 import numpy as np
 
 PyTree = Any
+
+MANIFEST_FORMAT = 3
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
@@ -55,6 +68,110 @@ def _key_str(k) -> str:
     return str(k)
 
 
+def _structure_desc(tree) -> Any:
+    """JSON-able container descriptor of ``tree``.
+
+    ``tree_flatten`` drops leafless containers (``None`` placeholders for
+    shared-site stage slots, empty dicts), so a manifest built from leaf
+    paths alone cannot reproduce the container arity the model's
+    ``jax.tree.map`` calls depend on.  The descriptor walks the *raw*
+    state instead: dicts/lists/tuples recurse, ``None`` maps to JSON
+    null, anything else is a leaf.
+    """
+    if tree is None:
+        return None
+    if isinstance(tree, dict):
+        return {"d": {str(k): _structure_desc(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        tag = "l" if isinstance(tree, list) else "t"
+        return {tag: [_structure_desc(v) for v in tree]}
+    return "leaf"
+
+
+def _build_from_desc(desc, node):
+    """Rebuild a pytree from its descriptor + nested name→array ``node``."""
+    if desc is None:
+        return None
+    if desc == "leaf":
+        return node
+    if "d" in desc:
+        sub = node if isinstance(node, dict) else {}
+        return {k: _build_from_desc(v, sub.get(k))
+                for k, v in desc["d"].items()}
+    items = desc["l"] if "l" in desc else desc["t"]
+    sub = node if isinstance(node, dict) else {}
+    seq = [_build_from_desc(v, sub.get(f"[{i}]"))
+           for i, v in enumerate(items)]
+    return seq if "l" in desc else tuple(seq)
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a manifest dtype name, including ml_dtypes extension types."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _storage_view(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """Return ``(storable, logical_dtype_name)`` for ``np.save``.
+
+    Builtin dtypes pass through; extension dtypes (kind ``V``: bfloat16,
+    float8 variants) are viewed as same-width uints so the file format
+    stays plain ``.npy``.
+    """
+    if arr.dtype.kind in "biufc" or arr.dtype == bool:
+        return arr, str(arr.dtype)
+    raw = np.ascontiguousarray(arr).view(f"u{arr.dtype.itemsize}")
+    return raw, str(arr.dtype)
+
+
+def _load_array(path: str, entry: Dict[str, Any]) -> np.ndarray:
+    arr = np.load(path)
+    logical = _np_dtype(entry["dtype"])
+    if arr.dtype != logical:
+        arr = arr.view(logical)
+    return arr
+
+
+def _bank_rank_axis(name: str, arr) -> Optional[int]:
+    """Rank axis of a padded per-expert factor bank leaf, else ``None``.
+
+    Banks are ``experts/<proj>/u: (E, kmax, m)`` (rank axis -2) and
+    ``experts/<proj>/v: (E, n, kmax)`` (rank axis -1).
+    """
+    if getattr(arr, "ndim", 0) != 3 or "/experts/" not in name:
+        return None
+    if name.endswith("/u"):
+        return -2
+    if name.endswith("/v"):
+        return -1
+    return None
+
+
+def _logical_ranks(arr: np.ndarray, axis: int) -> List[int]:
+    """Per-expert logical rank: kmax minus the trailing bitwise-zero slices.
+
+    The check is on *bits*, not values, so a ``-0.0`` in a live row never
+    gets mistaken for padding (re-padding writes ``+0.0``; value-level
+    zero tests would silently flip the sign bit and break bit-parity).
+    """
+    store, _ = _storage_view(arr)
+    bits = store if store.dtype.kind in "ui" else store.view(
+        f"u{store.dtype.itemsize}")
+    kmax = arr.shape[axis]
+    ranks = []
+    for e in range(arr.shape[0]):
+        sub = np.moveaxis(bits[e], axis, 0)
+        r = kmax
+        while r > 0 and not sub[r - 1].any():
+            r -= 1
+        ranks.append(r)
+    return ranks
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
         self.directory = directory
@@ -69,42 +186,69 @@ class CheckpointManager:
             self._worker.start()
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state: PyTree, *, blocking: bool = False):
-        """Snapshot to host and persist.  Non-blocking by default."""
+    def save(self, step: int, state: PyTree, *, blocking: bool = False,
+             meta: Optional[Dict[str, Any]] = None,
+             reslice_banks: bool = False):
+        """Snapshot to host and persist.  Non-blocking by default.
+
+        ``meta`` is stored verbatim in the manifest (``restore_tree``
+        returns it); ``reslice_banks`` exports per-expert factor banks
+        sliced to their logical ranks instead of the padded buffers.
+        """
         host = [(name, np.asarray(jax.device_get(leaf)))
                 for name, leaf in _flatten_with_paths(state)]
+        job = (step, host, dict(meta or {}), reslice_banks,
+               _structure_desc(state))
         if self._async and not blocking:
-            self._queue.put((step, host))  # blocks only if a save is in flight
+            self._queue.put(job)  # blocks only if a save is in flight
         else:
-            self._write(step, host)
+            self._write(*job)
 
     def wait(self):
         self._queue.join()
 
     def _drain(self):
         while True:
-            step, host = self._queue.get()
+            job = self._queue.get()
             try:
-                self._write(step, host)
+                self._write(*job)
             finally:
                 self._queue.task_done()
 
-    def _write(self, step: int, host):
+    def _write(self, step: int, host, meta: Optional[Dict[str, Any]] = None,
+               reslice_banks: bool = False, structure: Any = None):
         tmp = os.path.join(self.directory, f"step_{step:09d}.tmp")
         final = os.path.join(self.directory, f"step_{step:09d}")
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"step": step, "created": time.time(), "leaves": []}
+        manifest = {"step": step, "created": time.time(),
+                    "format": MANIFEST_FORMAT, "meta": meta or {},
+                    "structure": structure, "leaves": []}
         for i, (name, arr) in enumerate(host):
-            fname = f"leaf_{i:05d}.npy"
-            with open(os.path.join(tmp, fname), "wb") as f:
-                np.save(f, arr)
-                f.flush()
-                os.fsync(f.fileno())
-            manifest["leaves"].append(
-                {"name": name, "file": fname, "shape": list(arr.shape),
-                 "dtype": str(arr.dtype)})
+            axis = _bank_rank_axis(name, arr)
+            entry: Dict[str, Any] = {"name": name,
+                                     "shape": list(arr.shape)}
+            if axis is not None:
+                entry["rank_per_expert"] = _logical_ranks(arr, axis)
+            if axis is not None and reslice_banks:
+                entry["bank_axis"] = axis
+                entry["files"] = []
+                store, logical = _storage_view(arr)
+                entry["dtype"] = logical
+                for e, r in enumerate(entry["rank_per_expert"]):
+                    sub = np.take(store[e], np.arange(r), axis=axis)
+                    fname = f"leaf_{i:05d}_e{e:03d}.npy"
+                    self._fsync_save(os.path.join(tmp, fname),
+                                     np.ascontiguousarray(sub))
+                    entry["files"].append(fname)
+            else:
+                store, logical = _storage_view(arr)
+                entry["dtype"] = logical
+                fname = f"leaf_{i:05d}.npy"
+                self._fsync_save(os.path.join(tmp, fname), store)
+                entry["file"] = fname
+            manifest["leaves"].append(entry)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -113,6 +257,13 @@ class CheckpointManager:
             shutil.rmtree(final)
         os.rename(tmp, final)
         self._gc()
+
+    @staticmethod
+    def _fsync_save(path: str, arr: np.ndarray):
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
 
     def _gc(self):
         steps = self.all_steps()
@@ -137,6 +288,30 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest(self, step: Optional[int] = None) -> Dict[str, Any]:
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+
+    def _load_entry(self, d: str, entry: Dict[str, Any]) -> np.ndarray:
+        if "files" in entry:  # re-sliced bank: re-pad zero tails losslessly
+            logical = _np_dtype(entry["dtype"])
+            out = np.zeros(entry["shape"], dtype=logical)
+            axis = entry["bank_axis"]
+            for e, fname in enumerate(entry["files"]):
+                sub = _load_array(os.path.join(d, fname),
+                                  {"dtype": entry["dtype"]})
+                r = sub.shape[axis]
+                idx: List[Any] = [slice(None)] * out[e].ndim
+                idx[axis] = slice(0, r)
+                out[e][tuple(idx)] = sub
+            return out
+        return _load_array(os.path.join(d, entry["file"]), entry)
+
     def restore(self, step: Optional[int], like: PyTree,
                 shardings: Optional[PyTree] = None) -> Tuple[int, PyTree]:
         """Restore into the structure of ``like``; lay out onto ``shardings``
@@ -146,14 +321,12 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         d = os.path.join(self.directory, f"step_{step:09d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        manifest = self.manifest(step)
         by_name = {e["name"]: e for e in manifest["leaves"]}
         names = [name for name, _ in _flatten_with_paths(like)]
         arrays = []
         for name in names:
-            entry = by_name[name]
-            arrays.append(np.load(os.path.join(d, entry["file"])))
+            arrays.append(self._load_entry(d, by_name[name]))
         treedef = jax.tree_util.tree_structure(like)
         tree = jax.tree_util.tree_unflatten(treedef, arrays)
         if shardings is not None:
@@ -163,3 +336,45 @@ class CheckpointManager:
                 is_leaf=lambda x: x is None or isinstance(x, np.ndarray))
         self._restored_step = step
         return step, tree
+
+    def restore_tree(self, step: Optional[int] = None
+                     ) -> Tuple[int, PyTree, Dict[str, Any]]:
+        """Rebuild the saved pytree purely from the manifest — no ``like``
+        template needed.  The manifest's ``structure`` descriptor governs
+        container types and arity (including leafless slots: ``None``
+        shared-site placeholders, empty dicts — which leaf paths alone
+        cannot encode); manifests predating the descriptor fall back to
+        path-derived nesting (``[i]`` segments → list entries).  Returns
+        ``(step, tree, meta)``; the entry point for serving a checkpoint
+        produced by another process.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:09d}")
+        manifest = self.manifest(step)
+        nested: Dict[str, Any] = {}
+        for entry in manifest["leaves"]:
+            parts = entry["name"].split("/")
+            node = nested
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = self._load_entry(d, entry)
+
+        structure = manifest.get("structure")
+        if structure is not None:
+            tree = _build_from_desc(structure, nested)
+        else:
+            def materialize(node):
+                if not isinstance(node, dict):
+                    return node
+                if node and all(k.startswith("[") and k.endswith("]")
+                                for k in node):
+                    order = sorted(node, key=lambda k: int(k[1:-1]))
+                    return [materialize(node[k]) for k in order]
+                return {k: materialize(v) for k, v in node.items()}
+
+            tree = materialize(nested)
+        self._restored_step = step
+        return step, tree, manifest.get("meta", {})

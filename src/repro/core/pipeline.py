@@ -401,8 +401,18 @@ def _clone(tree):
     return jax.tree.map(lambda x: x, tree)
 
 
-def unroll_units(params, cfg) -> List[Unit]:
-    units: List[Unit] = []
+def unit_iterator(params, cfg):
+    """Yield the model's compression units one at a time, in solve order.
+
+    This is the explicit unit-iterator API the compression driver consumes
+    (``_compress_sweep`` walks whatever iterator it is handed): each unit's
+    params are materialized only when the iterator reaches it — scanned
+    stages slice iteration ``it`` out of the stacked buffers lazily — so a
+    future checkpoint-streaming source (ROADMAP item 5b: compress models
+    too big to hold whole) can yield :class:`Unit` objects loaded
+    shard-by-shard through the SAME driver loop.  ``unroll_units`` remains
+    the materialize-everything convenience wrapper."""
+    seen_shared: Set[str] = set()
 
     def walk(section: str, stages, stage_params):
         idx = 0
@@ -411,17 +421,18 @@ def unroll_units(params, cfg) -> List[Unit]:
             for it in range(iters):
                 for ki, kind in enumerate(st.kinds):
                     if kind in B.SHARED_KINDS:
-                        if not any(u.shared and u.kind == kind for u in units):
-                            units.append(Unit(
+                        if kind not in seen_shared:
+                            seen_shared.add(kind)
+                            yield Unit(
                                 name=f"{section}.shared.{kind}", kind=kind,
                                 where=(section, si, it, ki),
                                 params=_clone(params["shared"][kind]),
-                                shared=True))
+                                shared=True)
                         else:
-                            units.append(Unit(
+                            yield Unit(
                                 name=f"{section}.{idx}.{kind}(shared-site)",
                                 kind=kind, where=(section, si, it, ki),
-                                params=None, shared=True))
+                                params=None, shared=True)
                         idx += 1
                         continue
                     p = sp[ki]
@@ -429,15 +440,19 @@ def unroll_units(params, cfg) -> List[Unit]:
                         p = jax.tree.map(lambda a: a[it], p)
                     else:
                         p = _clone(p)  # fresh containers: set_path is in-place
-                    units.append(Unit(name=f"{section}.{idx}.{kind}",
-                                      kind=kind, where=(section, si, it, ki),
-                                      params=p))
+                    yield Unit(name=f"{section}.{idx}.{kind}",
+                               kind=kind, where=(section, si, it, ki),
+                               params=p)
                     idx += 1
 
     if "encoder" in params:
-        walk("enc", B.encoder_stages(cfg), params["encoder"]["stages"])
-    walk("dec", B.stage_program(cfg), params["stages"])
-    return units
+        yield from walk("enc", B.encoder_stages(cfg),
+                        params["encoder"]["stages"])
+    yield from walk("dec", B.stage_program(cfg), params["stages"])
+
+
+def unroll_units(params, cfg) -> List[Unit]:
+    return list(unit_iterator(params, cfg))
 
 
 def restack_units(params, cfg, units: List[Unit]):
@@ -834,7 +849,8 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
                     ccfg: CompressConfig, *, mesh, scan, refine_scan,
                     estimate: bool = False,
                     rank_table: Optional[Dict[Tuple[str, str], int]] = None,
-                    covs_table: Optional[Dict[str, Dict]] = None):
+                    covs_table: Optional[Dict[str, Dict]] = None,
+                    units: Optional[Any] = None):
     """One full pass over the units (the pre-adaptive ``compress_model``
     body).  The default invocation is the uniform driver, bit-for-bit.
 
@@ -845,10 +861,15 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
     ``rank_table`` ((unit name, path) → rank, adaptive sweep 2): overrides
     the uniform rank per linear.  ``covs_table`` (unit name → tap → covs,
     adaptive sweep 2): reuse kept triples instead of collecting — no
-    engine, no tapped forwards.
+    engine, no tapped forwards.  ``units``: an explicit unit iterator
+    (defaults to ``unit_iterator(params, cfg)``) — the loop below only
+    ever holds the current unit plus the already-processed list, so an
+    iterator streaming units from checkpoint shards plugs in unchanged
+    (ROADMAP item 5b).
     """
     params = jax.tree.map(lambda x: x, params)  # shallow-ish copy
-    units = unroll_units(params, cfg)
+    if units is None:
+        units = unit_iterator(params, cfg)
     report: Dict[str, Any] = {
         "units": [],
         "config": dataclasses.asdict(dataclasses.replace(
@@ -885,8 +906,10 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
     cur_streams = {"enc": (enc_orig, enc_comp), "dec": (x_stream, xp_stream)}
     shared_done: Dict[str, Any] = {}
     enc_normed = False
+    done_units: List[Unit] = []   # processed units, in order (restack input)
 
     for unit in units:
+        done_units.append(unit)
         section = unit.where[0]
         if section == "dec" and cfg.family == "encdec" and not enc_normed:
             # decoder cross-attention consumes the *normed* encoder output
@@ -1174,7 +1197,7 @@ def _compress_sweep(params, cfg, calib: Dict[str, jnp.ndarray],
         "dispatches": sum(u["refine_dispatches"] for u in refined),
         "wall": sum(u["refine_wall"] for u in refined),
     }
-    new_params = restack_units(params, cfg, units)
+    new_params = restack_units(params, cfg, done_units)
     return new_params, report, est
 
 

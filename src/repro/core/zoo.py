@@ -1,0 +1,226 @@
+"""Arch-zoo conformance harness: compress → checkpoint → serve, per config.
+
+AA-SVD's claim is *functional equivalence* of the compressed model; this
+module proves the compressed artifact survives the full production path —
+``pipeline.compress_model`` → ``checkpoint.CheckpointManager`` save/load →
+``launch.serve.Server`` reload → decode — for EVERY registered arch, at
+smoke scale.  The contract per arch (``roundtrip``):
+
+* **bit parity** — the checkpointed-and-reloaded params are bit-identical
+  to the in-memory compressed params (dtype + bytes), including the
+  zero-masked per-expert bank tails and factorized latent-KV factor pairs;
+  the re-sliced export (``reslice_banks=True``) must restore bit-identical
+  too (tails are exactly zero, so re-padding is lossless).
+* **token parity** — a ``Server`` built from the reload decodes
+  token-for-token against the in-memory server, for both the padded and
+  the re-sliced checkpoint.
+* **envelopes** — smoke perplexity ratio (compressed / dense) and reloaded
+  decode throughput land inside the per-arch envelopes checked in at
+  ``tests/conformance/envelopes.json``.
+
+The harness runs on deterministic synthetic data with fixed seeds, so the
+quality numbers are stable regression anchors rather than paper-scale
+measurements (see ``tests/conformance/README.md`` for re-baselining).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.pipeline import CompressConfig, compress_model
+from repro.data import calibration_set, make_batch_iterator, synthetic_tokens
+from repro.models import model as M
+
+PyTree = Any
+
+# One fixed recipe for every arch: aggressive enough that every unit kind
+# actually factorizes, small enough that the 13-arch matrix stays CI-sized.
+SMOKE_COMPRESS = dict(ratio=0.6, rank_multiple=1, microbatch=2,
+                      calib_mode="fused", refine_epochs=1)
+SMOKE_CALIB = dict(n=4, seq_len=32)
+SMOKE_PROMPTS = dict(batch=2, prompt_len=16)
+SMOKE_DECODE_STEPS = 12
+
+
+def smoke_cfg(arch: str):
+    """Smoke config pinned to float32 — conformance compares bits, and a
+    deterministic dtype keeps the parity contract platform-independent
+    (bf16 fidelity is covered by the checkpoint unit tests)."""
+    return get_smoke_config(arch).replace(dtype="float32")
+
+
+def smoke_inputs(cfg, *, seed: int = 7) -> Tuple[Any, Dict[str, Any]]:
+    """Prompts + modality extras matching the arch's frontend."""
+    key = jax.random.PRNGKey(seed)
+    b, plen = SMOKE_PROMPTS["batch"], SMOKE_PROMPTS["prompt_len"]
+    prompts = synthetic_tokens(key, b, plen, cfg.vocab_size)
+    extras: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        extras["patches"] = 0.02 * jax.random.normal(
+            key, (b, cfg.num_patches, cfg.d_model))
+    if cfg.frontend == "audio":
+        extras["frames"] = 0.02 * jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model))
+    return prompts, extras
+
+
+def compress_smoke(arch: str, *, seed: int = 0):
+    """Compress the arch at smoke scale.  Returns
+    ``(cfg, dense_params, compressed_params, report)``."""
+    cfg = smoke_cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    calib = calibration_set(cfg, SMOKE_CALIB["n"], SMOKE_CALIB["seq_len"])
+    comp, report = compress_model(params, cfg, calib,
+                                  CompressConfig(**SMOKE_COMPRESS))
+    return cfg, params, comp, report
+
+
+def smoke_ppl(params, cfg, *, seed: int = 99, batches: int = 2) -> float:
+    data = make_batch_iterator(cfg, 8, 64, seed=seed)
+    tot = 0.0
+    for _ in range(batches):
+        # repro-check: allow[host-sync-loop] — 2-batch ppl measurement; the per-batch sync IS the measurement boundary
+        tot += float(M.loss_fn(params, cfg, next(data))[0])
+    return float(np.exp(tot / batches))
+
+
+def bit_mismatches(a: PyTree, b: PyTree) -> List[str]:
+    """Leaf-level bit-parity diff: names + dtypes + raw bytes must agree.
+
+    Container types are allowed to differ (``restore_tree`` rebuilds lists
+    where the model may use tuples); the flattened path names are the
+    identity.
+    """
+    from repro.checkpoint.manager import _flatten_with_paths
+
+    fa, fb = _flatten_with_paths(a), _flatten_with_paths(b)
+    bad: List[str] = []
+    names_a = [n for n, _ in fa]
+    names_b = [n for n, _ in fb]
+    if names_a != names_b:
+        only_a = set(names_a) - set(names_b)
+        only_b = set(names_b) - set(names_a)
+        bad.append(f"leaf-name sets differ: -{sorted(only_a)[:3]} "
+                   f"+{sorted(only_b)[:3]}")
+        return bad
+    for (name, la), (_, lb) in zip(fa, fb):
+        xa, xb = np.asarray(la), np.asarray(lb)
+        if xa.dtype != xb.dtype:
+            bad.append(f"{name}: dtype {xa.dtype} != {xb.dtype}")
+        elif xa.shape != xb.shape:
+            bad.append(f"{name}: shape {xa.shape} != {xb.shape}")
+        elif xa.tobytes() != xb.tobytes():
+            bad.append(f"{name}: bytes differ")
+    return bad
+
+
+def roundtrip(arch: str, workdir: str, *,
+              steps: int = SMOKE_DECODE_STEPS
+              ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Full conformance roundtrip for one arch; returns
+    ``(matrix_row, compression_report)``.
+
+    compress → ppl(dense, compressed) → checkpoint twice (padded banks at
+    step 0, re-sliced banks at step 1) → reload each through
+    ``Server.from_checkpoint`` → decode all three servers on identical
+    prompts → record parity + throughput.
+    """
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.launch.serve import Server, _prefill_extra_len
+
+    t0 = time.monotonic()
+    cfg, dense, comp, report = compress_smoke(arch)
+    compress_wall = time.monotonic() - t0
+
+    ppl_dense = smoke_ppl(dense, cfg)
+    ppl_comp = smoke_ppl(comp, cfg)
+
+    mgr = CheckpointManager(workdir, async_save=False)
+    meta = {"arch": arch, "compress": dict(SMOKE_COMPRESS)}
+    mgr.save(0, comp, blocking=True, meta=meta)
+    mgr.save(1, comp, blocking=True, meta=meta, reslice_banks=True)
+
+    bank_leaves = sum("rank_per_expert" in e
+                      for e in mgr.manifest(0)["leaves"])
+
+    _, padded, meta0 = mgr.restore_tree(0)
+    _, resliced, _ = mgr.restore_tree(1)
+    pad_bad = bit_mismatches(comp, padded)
+    res_bad = bit_mismatches(comp, resliced)
+
+    prompts, extras = smoke_inputs(cfg)
+    max_len = (SMOKE_PROMPTS["prompt_len"] + _prefill_extra_len(cfg)
+               + steps + 8)
+    b = SMOKE_PROMPTS["batch"]
+
+    srv_mem = Server(cfg, comp, max_len=max_len, batch=b)
+    out_mem = np.asarray(srv_mem.generate(prompts, steps=steps,
+                                          extras=extras))
+    srv_pad = Server.from_checkpoint(cfg, workdir, step=0,
+                                     max_len=max_len, batch=b)
+    out_pad = np.asarray(srv_pad.generate(prompts, steps=steps,
+                                          extras=extras))
+    srv_res = Server.from_checkpoint(cfg, workdir, step=1,
+                                     max_len=max_len, batch=b)
+    out_res = np.asarray(srv_res.generate(prompts, steps=steps,
+                                          extras=extras))
+
+    t1 = time.monotonic()  # post-compile decode wall on the reloaded server
+    out2 = np.asarray(srv_pad.generate(prompts, steps=steps, extras=extras))
+    decode_wall = time.monotonic() - t1
+
+    record = {
+        "arch": arch,
+        "family": cfg.family,
+        "frontend": cfg.frontend,
+        "attention": cfg.attention,
+        "units": len(report["units"]),
+        "bank_leaves": bank_leaves,
+        "bit_parity": not pad_bad,
+        "resliced_parity": not res_bad,
+        "token_match": bool(np.array_equal(out_mem, out_pad)
+                            and np.array_equal(out_mem, out_res)
+                            and np.array_equal(out_pad, out2)),
+        "mismatches": (pad_bad + res_bad)[:8],
+        "checkpoint_meta_ok": meta0.get("arch") == arch,
+        "ppl_dense": ppl_dense,
+        "ppl_compressed": ppl_comp,
+        "ppl_ratio": ppl_comp / ppl_dense,
+        "tokens_per_s": b * steps / max(decode_wall, 1e-9),
+        "compress_wall_s": compress_wall,
+        "total_wall_s": time.monotonic() - t0,
+    }
+    return record, report
+
+
+# ---------------------------------------------------------------- envelopes
+def load_envelopes(path: str) -> Dict[str, Dict[str, float]]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_envelope(record: Dict[str, Any],
+                   env: Optional[Dict[str, float]]) -> List[str]:
+    """Violations of one arch's envelope (empty list = inside)."""
+    if env is None:
+        return [f"{record['arch']}: no envelope checked in"]
+    bad: List[str] = []
+    if not record["bit_parity"]:
+        bad.append(f"bit parity broken: {record['mismatches']}")
+    if not record["resliced_parity"]:
+        bad.append(f"re-sliced parity broken: {record['mismatches']}")
+    if not record["token_match"]:
+        bad.append("reloaded server decode diverged from in-memory")
+    if record["ppl_ratio"] > env["max_ppl_ratio"]:
+        bad.append(f"ppl_ratio {record['ppl_ratio']:.3f} > envelope "
+                   f"{env['max_ppl_ratio']}")
+    if record["tokens_per_s"] < env["min_tokens_per_s"]:
+        bad.append(f"tokens_per_s {record['tokens_per_s']:.1f} < envelope "
+                   f"{env['min_tokens_per_s']}")
+    return bad

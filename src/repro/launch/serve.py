@@ -92,6 +92,24 @@ class Server:
         self._serve = jax.jit(S.make_serve_step(cfg, mesh))
         self._prefill = jax.jit(S.make_prefill_step(cfg, mesh))
 
+    @classmethod
+    def from_checkpoint(cls, cfg, directory: str, *, step: int = None,
+                        max_len: int = 256, batch: int = 4, mesh=None):
+        """Reload served params from a :class:`CheckpointManager` directory.
+
+        Rebuilds the pytree purely from the manifest (``restore_tree``), so
+        the serving process needs only the arch config and the checkpoint
+        path — no template params.  The manifest ``meta`` dict lands on
+        ``server.checkpoint_meta``.
+        """
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(directory, async_save=False)
+        _, params, meta = mgr.restore_tree(step)
+        server = cls(cfg, params, max_len=max_len, batch=batch, mesh=mesh)
+        server.checkpoint_meta = meta
+        return server
+
     def generate(self, prompts: jnp.ndarray, *, steps: int = 32,
                  extras: Optional[dict] = None) -> jnp.ndarray:
         """prompts: (b, prompt_len) int32, b <= batch -> (b, steps)."""
@@ -176,6 +194,25 @@ class ContinuousBatchingServer:
                                                            chunked=True))
         self._cache_params = None if cache_layout == "dense" else params
         self.decode_step_times: List[float] = []
+        # rid -> which prefill path served it ("whole_exact" |
+        # "whole_extras" | "whole_padded" | "chunked"); reset per run().
+        self.prefill_routes: Dict[int, str] = {}
+
+    @classmethod
+    def from_checkpoint(cls, cfg, directory: str, *, step: int = None,
+                        max_len: int = 256, slots: int = 4,
+                        prefill_chunk: int = 0, mesh=None,
+                        cache_layout: str = "auto"):
+        """Engine twin of :meth:`Server.from_checkpoint`."""
+        from repro.checkpoint.manager import CheckpointManager
+
+        mgr = CheckpointManager(directory, async_save=False)
+        _, params, meta = mgr.restore_tree(step)
+        server = cls(cfg, params, max_len=max_len, slots=slots,
+                     prefill_chunk=prefill_chunk, mesh=mesh,
+                     cache_layout=cache_layout)
+        server.checkpoint_meta = meta
+        return server
 
     # ------------------------------------------------------------------
     def _admit(self, req: Request, cache, slot: int):
@@ -193,6 +230,11 @@ class ContinuousBatchingServer:
         slot_cache = M.cache_slot_take(cfg, cache, slot)
         extras = {k: jnp.asarray(v) for k, v in (req.extras or {}).items()}
         chunk = self.prefill_chunk
+        self.prefill_routes[req.rid] = (
+            "whole_exact" if self._exact
+            else "whole_extras" if extras
+            else "whole_padded" if chunk <= 0
+            else "chunked")
         if self._exact or extras or chunk <= 0:
             if self._exact:
                 toks = prompt[None]              # exact length, no padding
@@ -233,6 +275,7 @@ class ContinuousBatchingServer:
         active: List[Optional[dict]] = [None] * self.slots
         results: Dict[int, Dict[str, Any]] = {}
         self.decode_step_times = []
+        self.prefill_routes = {}
         start = time.monotonic()
         now = lambda: time.monotonic() - start  # noqa: E731
         qi = 0

@@ -1,0 +1,39 @@
+"""Shared fixtures for the arch-zoo conformance matrix.
+
+One ``zoo.roundtrip`` run per arch per session — the roundtrip test, the
+report-schema golden test, and the matrix envelope checks all read the
+same cached ``(record, report)`` pair, so the matrix compresses each arch
+exactly once no matter how many tests consume it.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import pytest
+
+ENVELOPES_PATH = os.path.join(os.path.dirname(__file__), "envelopes.json")
+
+_CACHE: Dict[str, Tuple[Dict[str, Any], Dict[str, Any]]] = {}
+
+
+@pytest.fixture(scope="session")
+def zoo_run(tmp_path_factory):
+    """``zoo_run(arch) -> (matrix_record, compression_report)``, cached."""
+    from repro.core import zoo
+
+    def get(arch: str):
+        if arch not in _CACHE:
+            workdir = tmp_path_factory.mktemp(f"zoo_{arch.replace('.', '_')}")
+            _CACHE[arch] = zoo.roundtrip(arch, str(workdir))
+        return _CACHE[arch]
+
+    return get
+
+
+@pytest.fixture(scope="session")
+def envelopes():
+    from repro.core import zoo
+
+    return zoo.load_envelopes(ENVELOPES_PATH)

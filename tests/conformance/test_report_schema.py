@@ -1,0 +1,109 @@
+"""Golden-schema lock on the compression report, per arch-kind.
+
+The benchmark trajectory (``benchmarks/*.py``) parses
+``report["calibration"]`` / ``report["refinement"]`` / the per-linear rank
+entries; silent key drift there used to surface as nulls in BENCH
+artifacts.  This locks the key sets so drift fails tier-1 instead.
+
+One representative arch per arch-kind — the kinds differ in report shape
+(MoE adds drop-rate accounting, hybrids add weight-shared reuse entries),
+so each shape variant gets its own golden.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+pytestmark = [pytest.mark.zoo_smoke, pytest.mark.slow]
+
+# arch-kind -> representative arch (one per distinct report shape)
+REPRESENTATIVES = {
+    "dense-full": "qwen3-0.6b",
+    "dense-sliding": "gemma3-1b",
+    "moe-mla": "deepseek-v2-lite-16b",
+    "ssm": "falcon-mamba-7b",
+    "hybrid-shared": "zamba2-7b",
+    "encdec-audio": "whisper-base",
+    "vlm-vision": "phi-3-vision-4.2b",
+}
+
+TOP_KEYS = {"units", "calibration", "refinement", "config"}
+
+CALIBRATION_KEYS = {"mode", "tapped_forwards", "replayed_groups",
+                    "calib_dp", "rank_mode", "moe_dispatch", "wall"}
+CALIBRATION_OPTIONAL = {"moe_drop_rate"}  # MoE archs only
+
+REFINEMENT_KEYS = {"scan", "steps", "dispatches", "wall"}
+
+# every compressed (non-reused) unit entry carries at least these
+UNIT_KEYS = {"name", "kind", "calib_mode", "linears", "tapped_forwards",
+             "calib_wall", "replayed_groups"}
+# weight-shared reuse sites carry exactly these (zero-forward accounting)
+REUSED_UNIT_KEYS = {"name", "kind", "calib_mode", "reused",
+                    "tapped_forwards", "replayed_groups"}
+
+# the rank table the benchmarks read: one entry per factorized linear
+LINEAR_KEYS = {"path", "rank", "ratio", "shape"}
+
+
+@pytest.mark.parametrize("kind", sorted(REPRESENTATIVES))
+def test_report_schema_golden(kind, zoo_run):
+    arch = REPRESENTATIVES[kind]
+    record, report = zoo_run(arch)
+
+    assert TOP_KEYS <= set(report.keys()), (
+        f"{arch}: top-level report keys drifted: {sorted(report)}")
+
+    calib = set(report["calibration"].keys())
+    assert CALIBRATION_KEYS <= calib, (
+        f"{arch}: calibration keys missing: {CALIBRATION_KEYS - calib}")
+    extra = calib - CALIBRATION_KEYS - CALIBRATION_OPTIONAL
+    assert not extra, f"{arch}: unexpected calibration keys: {extra}"
+    if record["family"] == "moe":
+        assert report["calibration"]["moe_dispatch"] is not None
+    assert set(report["refinement"].keys()) == REFINEMENT_KEYS, (
+        f"{arch}: refinement keys drifted: "
+        f"{sorted(report['refinement'])}")
+    assert "mode" in report["calibration"]["rank_mode"], (
+        f"{arch}: rank_mode summary lost its 'mode' key")
+
+    assert report["units"], f"{arch}: empty unit list"
+    for u in report["units"]:
+        if u.get("reused"):
+            assert REUSED_UNIT_KEYS <= set(u.keys()), (
+                f"{arch}/{u['name']}: reused-unit keys drifted: "
+                f"{sorted(u)}")
+            assert u["tapped_forwards"] == 0
+            continue
+        assert UNIT_KEYS <= set(u.keys()), (
+            f"{arch}/{u['name']}: unit keys missing: "
+            f"{UNIT_KEYS - set(u.keys())}")
+        assert u["linears"], f"{arch}/{u['name']}: no factorized linears"
+        for lin in u["linears"]:
+            assert LINEAR_KEYS <= set(lin.keys()), (
+                f"{arch}/{u['name']}/{lin.get('path')}: rank-entry keys "
+                f"missing: {LINEAR_KEYS - set(lin.keys())}")
+            assert lin["rank"] >= 1
+
+
+def test_hybrid_reports_shared_reuse(zoo_run):
+    """zamba2's shared attention block must appear once compressed and
+    once (or more) as a reuse site — the accounting contract the
+    calibration totals rely on."""
+    _, report = zoo_run(REPRESENTATIVES["hybrid-shared"])
+    shared = [u for u in report["units"] if "shared" in u["name"]]
+    assert any(u.get("reused") for u in shared), (
+        "no reuse entries in the hybrid report")
+    assert any(not u.get("reused") for u in shared), (
+        "shared block never actually compressed")
+
+
+def test_moe_drop_rate_accounting(zoo_run):
+    """MoE reports must expose per-unit drop rates (zero under drop-free
+    dispatch) — the calibration-size benchmark plots them."""
+    _, report = zoo_run(REPRESENTATIVES["moe-mla"])
+    moe_units = [u for u in report["units"]
+                 if u["kind"].endswith("_moe") and not u.get("reused")]
+    assert moe_units, "no MoE units in the deepseek report"
+    for u in moe_units:
+        assert "moe_drop_rate" in u, f"{u['name']}: missing moe_drop_rate"

@@ -1,0 +1,100 @@
+"""Serving prefill-fallback routing, asserted per arch class.
+
+The continuous-batching engine routes each admission through one of four
+prefill paths (see ``serve.ContinuousBatchingServer``):
+
+* ``whole_exact``   — SSM / hybrid / sliding-window-ring archs: state and
+  ring caches can neither resume mid-sequence nor tolerate right-padding.
+* ``whole_extras``  — requests carrying modality extras (vision patches,
+  audio frames) prefill whole in a single chunk.
+* ``chunked``       — plain attention archs with ``prefill_chunk > 0``.
+* ``whole_padded``  — plain attention archs without chunking.
+
+Before this suite the dispatch was only exercised implicitly on two
+archs; these tests pin the routing CLASS -> PATH table explicitly, with
+chunking enabled so the fallbacks actually have something to fall back
+from.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.serve import ContinuousBatchingServer, Request
+from repro.models import model as M
+
+pytestmark = pytest.mark.zoo_smoke
+
+PROMPT_LEN = 12
+STEPS = 3
+
+
+def _engine_run(arch: str, *, prefill_chunk: int = 8):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, size=(PROMPT_LEN,),
+                          dtype=np.int32)
+    extras = None
+    if cfg.frontend == "vision":
+        extras = {"patches": 0.02 * np.asarray(jax.random.normal(
+            jax.random.PRNGKey(1), (1, cfg.num_patches, cfg.d_model)))}
+    if cfg.frontend == "audio":
+        extras = {"frames": 0.02 * np.asarray(jax.random.normal(
+            jax.random.PRNGKey(1), (1, cfg.encoder_seq_len, cfg.d_model)))}
+    max_len = PROMPT_LEN + (cfg.num_patches if cfg.frontend == "vision"
+                            else 0) + STEPS + 8
+    eng = ContinuousBatchingServer(cfg, params, max_len=max_len, slots=1,
+                                   prefill_chunk=prefill_chunk)
+    results = eng.run([Request(rid=0, prompt=prompt, steps=STEPS,
+                               extras=extras)])
+    return cfg, eng, results
+
+
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-7b",
+                                  "gemma3-1b"])
+def test_stateful_archs_take_whole_exact_prefill(arch):
+    """SSM / hybrid / ring archs must bypass chunking even when the
+    engine is configured to chunk."""
+    cfg, eng, results = _engine_run(arch, prefill_chunk=8)
+    assert eng._exact, f"{arch}: engine did not classify as exact-length"
+    assert eng.prefill_routes[0] == "whole_exact"
+    assert results[0]["tokens"].shape == (STEPS,)
+
+
+@pytest.mark.parametrize("arch", ["whisper-base", "phi-3-vision-4.2b"])
+def test_modality_archs_take_single_chunk_extras_prefill(arch):
+    """Enc-dec audio and vision requests prefill whole (extras ride the
+    first and only chunk)."""
+    cfg, eng, results = _engine_run(arch, prefill_chunk=8)
+    assert not eng._exact
+    assert eng.prefill_routes[0] == "whole_extras"
+    assert results[0]["tokens"].shape == (STEPS,)
+
+
+@pytest.mark.parametrize("arch,chunk,route", [
+    ("qwen3-0.6b", 8, "chunked"),
+    ("qwen3-0.6b", 0, "whole_padded"),
+    ("llama-7b", 4, "chunked"),
+    ("llama-7b", 0, "whole_padded"),
+])
+def test_plain_attention_archs_chunk_when_configured(arch, chunk, route):
+    cfg, eng, results = _engine_run(arch, prefill_chunk=chunk)
+    assert not eng._exact
+    assert eng.prefill_routes[0] == route
+    assert results[0]["tokens"].shape == (STEPS,)
+    assert 0 <= int(results[0]["tokens"].min())
+    assert int(results[0]["tokens"].max()) < cfg.vocab_size
+
+
+def test_routes_reset_per_run():
+    """prefill_routes reflects the LAST run only — no stale rids."""
+    cfg, eng, _ = _engine_run("qwen3-0.6b", prefill_chunk=0)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, size=(PROMPT_LEN,),
+                          dtype=np.int32)
+    eng.run([Request(rid=7, prompt=prompt, steps=2)])
+    assert set(eng.prefill_routes) == {7}

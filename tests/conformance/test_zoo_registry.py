@@ -1,0 +1,71 @@
+"""Collection guard: the zoo, the registry, and the envelopes must agree.
+
+Adding a config module without registering it, or registering an arch
+without checking in a conformance envelope, fails the build here — BEFORE
+the matrix runs — so a half-wired arch can never ship silently.
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+from repro.configs import ALL_ARCHS, _REGISTRY
+
+pytestmark = pytest.mark.zoo_smoke
+
+ENVELOPES_PATH = os.path.join(os.path.dirname(__file__), "envelopes.json")
+
+CONFIG_DIR = os.path.join(os.path.dirname(__file__), "..", "..",
+                          "src", "repro", "configs")
+NON_ARCH_MODULES = {"__init__", "base"}
+
+
+def _config_modules():
+    return {f[:-3] for f in os.listdir(CONFIG_DIR)
+            if f.endswith(".py") and f[:-3] not in NON_ARCH_MODULES}
+
+
+def test_every_config_module_is_registered():
+    modules = _config_modules()
+    registered = set(_REGISTRY.values())
+    missing = modules - registered
+    assert not missing, (
+        f"config modules not in the arch registry: {sorted(missing)} — "
+        "register them in src/repro/configs/__init__.py")
+    dangling = registered - modules
+    assert not dangling, (
+        f"registry entries without a config module: {sorted(dangling)}")
+
+
+def test_every_arch_has_an_envelope():
+    from repro.core import zoo
+
+    envs = zoo.load_envelopes(ENVELOPES_PATH)
+    missing = set(ALL_ARCHS) - set(envs)
+    assert not missing, (
+        f"archs without a conformance envelope: {sorted(missing)} — "
+        "run `python benchmarks/run.py --zoo` and add the measured "
+        "envelope to tests/conformance/envelopes.json "
+        "(see tests/conformance/README.md)")
+
+
+def test_no_orphan_envelopes():
+    from repro.core import zoo
+
+    envs = zoo.load_envelopes(ENVELOPES_PATH)
+    orphans = set(envs) - set(ALL_ARCHS)
+    assert not orphans, (
+        f"envelopes for unknown archs: {sorted(orphans)}")
+
+
+def test_envelope_shape():
+    from repro.core import zoo
+
+    envs = zoo.load_envelopes(ENVELOPES_PATH)
+    for arch, env in envs.items():
+        assert set(env) >= {"max_ppl_ratio", "min_tokens_per_s"}, (
+            f"{arch}: envelope missing bounds: {sorted(env)}")
+        assert env["max_ppl_ratio"] > 0
+        assert env["min_tokens_per_s"] >= 0

@@ -1,0 +1,48 @@
+"""Tentpole: compress → checkpoint → serve conformance, for EVERY arch.
+
+Each arch's compressed artifact must survive serialization and serving
+unchanged: bit-identical params after reload (padded AND re-sliced bank
+exports), token-for-token decode parity between the in-memory and the
+reloaded server, and quality/throughput inside the checked-in envelopes.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import ALL_ARCHS
+from repro.core import zoo
+
+pytestmark = [pytest.mark.zoo_smoke, pytest.mark.slow]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_roundtrip_conformance(arch, zoo_run, envelopes):
+    record, _ = zoo_run(arch)
+
+    assert record["bit_parity"], (
+        f"{arch}: reloaded params not bit-identical: {record['mismatches']}")
+    assert record["resliced_parity"], (
+        f"{arch}: re-sliced bank export not lossless: "
+        f"{record['mismatches']}")
+    assert record["token_match"], (
+        f"{arch}: reloaded server decode diverged from in-memory server")
+    assert record["checkpoint_meta_ok"], (
+        f"{arch}: manifest meta did not round-trip")
+
+    violations = zoo.check_envelope(record, envelopes.get(arch))
+    assert not violations, f"{arch}: {violations}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_moe_bank_rank_metadata(arch, zoo_run):
+    """MoE archs must carry per-expert rank metadata in the manifest —
+    the re-slicing export and downstream tooling read it."""
+    record, _ = zoo_run(arch)
+    if record["family"] == "moe":
+        assert record["bank_leaves"] > 0, (
+            f"{arch}: no rank_per_expert entries in the manifest")
+    else:
+        assert record["bank_leaves"] == 0, (
+            f"{arch}: unexpected bank leaves for family "
+            f"{record['family']}")
